@@ -1,0 +1,98 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dp import DPConfig
+from repro.core.federation import (
+    FederationConfig,
+    normalize_participants,
+    run_decaph,
+    run_fl,
+    run_local,
+    run_primia,
+)
+from repro.core.mia import auroc
+from repro.data.partition import train_test_split_silos
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6  # microseconds
+
+
+def utility_comparison(model, silos, *, rounds, batch, lr, sigma, clip,
+                       eps_budget, seed=0, microbatch=16):
+    """Run the paper's four arms and return test metrics for each.
+
+    sigma=None self-calibrates the noise multiplier so the DP arms can use
+    all ``rounds`` within ``eps_budget`` (the paper: "carefully calibrating
+    the privacy-related hyperparameters").
+    """
+    silos = normalize_participants(silos)
+    train, tx, ty = train_test_split_silos(silos, 0.2, seed=seed)
+    if sigma is None:
+        from repro.core.accountant import sigma_for_epsilon
+
+        rate = batch / sum(len(p) for p in train)
+        sigma = sigma_for_epsilon(rate, rounds, eps_budget, 1e-5)
+    cfg = FederationConfig(
+        rounds=rounds, batch_size=batch, lr=lr, seed=seed, use_secagg=False,
+        dp=DPConfig(clip_norm=clip, noise_multiplier=sigma,
+                    microbatch_size=microbatch),
+        epsilon_budget=eps_budget,
+    )
+    out = {}
+    res_fl, t_fl = timed(run_fl, model, train, cfg)
+    out["fl"] = (res_fl.params, 0.0, t_fl / max(res_fl.rounds_completed, 1))
+    res_dc, t_dc = timed(run_decaph, model, train, cfg)
+    out["decaph"] = (res_dc.params, res_dc.epsilon,
+                     t_dc / max(res_dc.rounds_completed, 1))
+    res_pm, t_pm = timed(run_primia, model, train, cfg)
+    out["primia"] = (res_pm.params, res_pm.epsilon,
+                     t_pm / max(res_pm.rounds_completed, 1))
+    res_lo, t_lo = timed(run_local, model, train, cfg)
+    out["local"] = (res_lo.per_client_params, 0.0, t_lo / rounds)
+    return out, tx, ty
+
+
+def binary_auroc(model, params, tx, ty):
+    scores = np.asarray(model.predict_fn(params, jnp.asarray(tx)))
+    if scores.ndim > 1:
+        scores = scores[..., 0]
+    return auroc(scores, ty.astype(np.int32))
+
+
+def multiclass_metrics(model, params, tx, ty, n_classes):
+    probs = np.asarray(model.predict_fn(params, jnp.asarray(tx)))
+    pred = probs.argmax(-1)
+    f1s, ws_p, ws_r, ns = [], 0.0, 0.0, 0
+    for c in range(n_classes):
+        tp = ((pred == c) & (ty == c)).sum()
+        fp = ((pred == c) & (ty != c)).sum()
+        fn = ((pred != c) & (ty == c)).sum()
+        prec = tp / max(tp + fp, 1)
+        rec = tp / max(tp + fn, 1)
+        f1s.append(2 * tp / max(2 * tp + fp + fn, 1))
+        nc = (ty == c).sum()
+        ws_p += nc * prec
+        ws_r += nc * rec
+        ns += nc
+    return {
+        "median_f1": float(np.median(f1s)),
+        "weighted_precision": float(ws_p / max(ns, 1)),
+        "weighted_recall": float(ws_r / max(ns, 1)),
+        "accuracy": float((pred == ty).mean()),
+    }
+
+
+def multilabel_auroc(model, params, tx, ty):
+    probs = np.asarray(model.predict_fn(params, jnp.asarray(tx)))
+    return [auroc(probs[:, j], ty[:, j].astype(np.int32))
+            for j in range(ty.shape[1])]

@@ -1,0 +1,74 @@
+"""Kernel timings: Pallas path (interpret on CPU; real on TPU) vs jnp oracle.
+
+On this CPU container the numbers compare the oracle against interpret mode
+(a correctness harness, not a speed claim); on TPU the same harness times the
+real kernels.  The derived column reports the oracle's HBM-traffic ratio —
+the structural reason the kernel wins on TPU (see kernels/*/kernel.py).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ghost_norm.ref import ghost_norm_ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(fast: bool = True) -> list[dict]:
+    key = jax.random.key(0)
+    rows = []
+
+    # ghost_norm: oracle materialises 2 x [B,S,S] Grams in HBM; kernel keeps
+    # them in VMEM. traffic ratio = (2 B S^2) / (B S (din + dout)).
+    b, s, din, dout = (8, 256, 512, 512) if fast else (16, 1024, 1024, 1024)
+    a = jax.random.normal(jax.random.fold_in(key, 1), (b, s, din))
+    g = jax.random.normal(jax.random.fold_in(key, 2), (b, s, dout))
+    us = _time(jax.jit(ghost_norm_ref), a, g)
+    ratio = (2 * s * s) / (s * (din + dout) / 4)
+    rows.append({
+        "name": f"ghost_norm_oracle_b{b}_s{s}_d{din}",
+        "us_per_call": us,
+        "derived": f"hbm_gram_traffic_ratio={ratio:.2f}x",
+    })
+
+    # flash attention: oracle materialises [B,H,S,S] probs.
+    b, s, h, kv, d = (2, 512, 8, 2, 64) if fast else (4, 2048, 16, 4, 128)
+    q = jax.random.normal(jax.random.fold_in(key, 3), (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 4), (b, s, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 5), (b, s, kv, d))
+    us = _time(jax.jit(lambda q_, k_, v_: attention_ref(q_, k_, v_)), q, k, v)
+    rows.append({
+        "name": f"flash_oracle_b{b}_s{s}_h{h}",
+        "us_per_call": us,
+        "derived": f"scores_hbm_bytes={b*h*s*s*4:.0f};kernel=vmem_only",
+    })
+
+    # decode attention at a long KV
+    b, l, h, kv, d = (2, 8192, 8, 2, 64) if fast else (8, 32768, 16, 4, 128)
+    q = jax.random.normal(jax.random.fold_in(key, 6), (b, 1, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 7), (b, l, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 8), (b, l, kv, d))
+    idx = jnp.asarray(l - 1, jnp.int32)
+    us = _time(jax.jit(
+        lambda q_, k_, v_, i_: decode_attention_ref(q_, k_, v_, i_)
+    ), q, k, v, idx)
+    cache_gb = b * l * kv * d * 2 * 4 / 1e9
+    rows.append({
+        "name": f"decode_oracle_b{b}_l{l}",
+        "us_per_call": us,
+        "derived": f"cache_read_GB={cache_gb:.3f};min_time_at_819GBps="
+                   f"{cache_gb/819*1e6:.1f}us",
+    })
+    return rows

@@ -1,0 +1,68 @@
+"""Roofline report: reads the dry-run artifacts and emits the per
+(arch x shape x mesh) three-term roofline table (EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_records(pattern: str = "*.json") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(fast: bool = True) -> list[dict]:
+    rows = []
+    for rec in load_records():
+        if rec.get("tag"):
+            continue  # perf-iteration artifacts reported in EXPERIMENTS.md
+        r = rec["roofline"]
+        rows.append({
+            "name": f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}",
+            "us_per_call": rec.get("compile_s", 0) * 1e6,
+            "derived": (
+                f"compute_s={r['compute_s']:.3e};"
+                f"memory_s={r['memory_s']:.3e};"
+                f"collective_s={r['collective_s']:.3e};"
+                f"bottleneck={r['bottleneck']};"
+                f"useful_ratio={rec.get('useful_flops_ratio') and round(rec['useful_flops_ratio'], 3)}"
+            ),
+        })
+    if not rows:
+        rows.append({
+            "name": "roofline_missing",
+            "us_per_call": 0.0,
+            "derived": "run `python -m repro.launch.dryrun --all` first",
+        })
+    return rows
+
+
+def markdown_table(records: list[dict]) -> str:
+    """Full §Roofline markdown table (used to generate EXPERIMENTS.md)."""
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| bottleneck | MODEL_FLOPS | HLO FLOPs | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        r = rec["roofline"]
+        ratio = rec.get("useful_flops_ratio")
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['bottleneck']}** "
+            f"| {rec['model_flops']:.3e} | {rec['corrected_flops']:.3e} "
+            f"| {ratio:.3f} |" if ratio else
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['bottleneck']}** "
+            f"| {rec['model_flops']:.3e} | {rec['corrected_flops']:.3e} | - |"
+        )
+    return "\n".join(lines)

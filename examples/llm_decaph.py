@@ -1,0 +1,44 @@
+"""End-to-end driver: DP (DeCaPH) language-model training at ~100M scale.
+
+Wraps launch/train.py's machinery: a smollm-family model trained with
+per-example clipping + aggregate noise on a synthetic multi-silo token
+stream, a few hundred steps.  At the default demo scale this finishes in a
+few minutes on CPU; pass --scale 100m --steps 300 for the full exercise.
+
+Run:  PYTHONPATH=src python examples/llm_decaph.py [--steps 50]
+"""
+
+import argparse
+import subprocess
+import sys
+import os
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--scale", default="smoke", choices=["smoke", "100m"])
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--arch", default="smollm-360m")
+    args = p.parse_args()
+
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", args.arch,
+        "--scale", args.scale,
+        "--steps", str(args.steps),
+        "--batch", str(args.batch),
+        "--seq", str(args.seq),
+        "--sigma", "0.6",
+        "--clip", "1.0",
+        "--n-silos", "4",
+        "--log-every", "10",
+    ]
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", os.path.join(os.path.dirname(__file__), "..", "src"))
+    raise SystemExit(subprocess.run(cmd, env=env).returncode)
+
+
+if __name__ == "__main__":
+    main()

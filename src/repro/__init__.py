@@ -1,0 +1,8 @@
+"""repro: DeCaPH (Decentralised, Collaborative, Privacy-preserving ML) on JAX/TPU.
+
+Top-level package for the production framework reproducing and extending
+Fang et al., "Decentralised, Collaborative, and Privacy-preserving Machine
+Learning for Multi-Hospital Data" (eBioMedicine 2024).
+"""
+
+__version__ = "0.1.0"

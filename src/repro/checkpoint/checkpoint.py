@@ -1,0 +1,78 @@
+"""Pytree checkpointing on msgpack (no orbax dependency).
+
+Arrays are gathered to host (fully-addressable) and serialised with dtype /
+shape; the tree structure is stored as nested msgpack maps.  Step metadata
+travels in the same file.  Atomic write via temp-file rename.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+_ARR = "__arr__"
+
+
+def _pack_leaf(x):
+    arr = np.asarray(x)
+    return {
+        _ARR: True,
+        "dtype": str(arr.dtype),
+        "shape": list(arr.shape),
+        "data": arr.tobytes(),
+    }
+
+
+def _pack(tree):
+    if isinstance(tree, dict):
+        return {"__map__": {k: _pack(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"__seq__": [_pack(v) for v in tree],
+                "__tuple__": isinstance(tree, tuple)}
+    return _pack_leaf(tree)
+
+
+def _unpack(obj):
+    if isinstance(obj, dict) and "__map__" in obj:
+        return {k: _unpack(v) for k, v in obj["__map__"].items()}
+    if isinstance(obj, dict) and "__seq__" in obj:
+        seq = [_unpack(v) for v in obj["__seq__"]]
+        return tuple(seq) if obj.get("__tuple__") else seq
+    if isinstance(obj, dict) and obj.get(_ARR):
+        arr = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
+        return jnp.asarray(arr.reshape(obj["shape"]))
+    return obj
+
+
+def save_checkpoint(path: str, tree: PyTree, step: int = 0,
+                    metadata: dict | None = None) -> None:
+    tree = jax.device_get(tree)
+    payload = {
+        "step": step,
+        "metadata": metadata or {},
+        "tree": _pack(tree),
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_checkpoint(path: str) -> tuple[PyTree, int, dict]:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    return _unpack(payload["tree"]), payload["step"], payload["metadata"]

@@ -1,0 +1,44 @@
+"""Architecture configs: one module per assigned architecture.
+
+``get_config(arch_id)`` resolves the CLI ``--arch`` ids (dashes allowed) to
+the full-size config; ``get_smoke_config(arch_id)`` returns the reduced
+same-family variant used by CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHITECTURES = {
+    "smollm-360m": "repro.configs.smollm_360m",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "whisper-small": "repro.configs.whisper_small",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+}
+
+INPUT_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def get_config(arch_id: str):
+    mod = importlib.import_module(ARCHITECTURES[arch_id])
+    return mod.config()
+
+
+def get_smoke_config(arch_id: str):
+    mod = importlib.import_module(ARCHITECTURES[arch_id])
+    return mod.smoke_config()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHITECTURES)

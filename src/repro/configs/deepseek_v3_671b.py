@@ -1,0 +1,63 @@
+"""DeepSeek-V3-671B — MLA, 1 shared + 256 routed experts top-8 [arXiv:2412.19437].
+
+First 3 layers dense FFN (d_ff 18432), remaining 58 MoE (expert d_ff 2048),
+per the V3 report.  MLA decode uses the absorbed compressed-latent cache
+(576 B/token/layer) — the native sub-quadratic-memory long-context path.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        arch_type="moe",
+        citation="arXiv:2412.19437",
+        d_model=7168,
+        n_layers=61,
+        n_heads=128,
+        n_kv_heads=128,
+        head_dim=128,
+        d_ff=18432,                   # dense-layer FFN width
+        vocab_size=129280,
+        stack=(
+            (3, (LayerSpec("mla", "dense"),)),
+            (58, (LayerSpec("mla", "moe"),)),
+        ),
+        ffn_kind="swiglu",
+        norm="rmsnorm",
+        tie_embeddings=False,
+        n_experts=256,
+        moe_top_k=8,
+        n_shared_experts=1,
+        expert_d_ff=2048,
+        capacity_factor=1.25,
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_dim=128,
+        qk_rope_dim=64,
+        v_head_dim=128,
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        dp_microbatch=1,
+        optimizer="adafactor",
+        lr=1e-4,
+        remat=True,
+        long_context_mode="native",   # MLA compressed cache
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        d_model=128, n_layers=2, n_heads=4, n_kv_heads=4, head_dim=32,
+        d_ff=256, expert_d_ff=64, vocab_size=512,
+        n_experts=4, moe_top_k=2, n_shared_experts=1,
+        q_lora_rank=48, kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+        v_head_dim=16,
+        stack=(
+            (1, (LayerSpec("mla", "dense"),)),
+            (1, (LayerSpec("mla", "moe"),)),
+        ),
+        remat=False,
+        param_dtype="float32", compute_dtype="float32",
+    )

@@ -1,0 +1,91 @@
+"""Input specs (ShapeDtypeStructs) for every (architecture x input shape).
+
+``input_specs(cfg, shape_name)`` returns ``(cfg', specs, kind)`` where cfg'
+carries any shape-specific overrides (e.g. the sliding-window variant dense
+archs use at long_500k) and ``specs`` feeds ``jax.jit(...).lower(**specs)``
+directly — nothing is allocated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES
+
+
+class ShapeSkip(Exception):
+    """Raised when an (arch, shape) pair is skipped (recorded in DESIGN.md)."""
+
+
+def apply_shape_overrides(cfg, shape_name: str):
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k":
+        if cfg.long_context_mode == "skip":
+            raise ShapeSkip(
+                f"{cfg.name}: long_500k skipped ({cfg.arch_type}; see DESIGN.md)"
+            )
+        if cfg.long_context_mode == "window":
+            cfg = cfg.replace(sliding_window=cfg.long_context_window or 8192)
+    if shape["kind"] == "decode" and cfg.arch_type == "audio":
+        pass  # decoder self-KV spans seq_len; cross-KV fixed at n_audio_ctx
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_specs(cfg, shape_name: str) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    b, s = shape["global_batch"], shape["seq_len"]
+    if cfg.arch_type == "vlm":
+        sv = int(s * cfg.vision_prefix_frac)
+        st = s - sv
+        return {
+            "tokens": _sds((b, st), jnp.int32),
+            "labels": _sds((b, st), jnp.int32),
+            "vision_embeds": _sds((b, sv, cfg.d_model), cfg.cdtype),
+            "mrope_positions": _sds((b, s, 3), jnp.int32),
+        }
+    if cfg.arch_type == "audio":
+        return {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+            "frames": _sds((b, cfg.n_audio_ctx, cfg.d_model), cfg.cdtype),
+        }
+    return {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+
+
+def prefill_specs(cfg, shape_name: str) -> dict:
+    specs = train_specs(cfg, shape_name)
+    specs.pop("labels", None)
+    return specs
+
+
+def decode_specs(cfg, shape_name: str) -> dict:
+    from repro.models import transformer
+
+    shape = INPUT_SHAPES[shape_name]
+    b, s = shape["global_batch"], shape["seq_len"]
+    cache = transformer.cache_spec(cfg, b, s)
+    specs = {
+        "tokens": _sds((b, 1), jnp.int32),
+        "cache": cache,
+        "index": _sds((), jnp.int32),
+    }
+    return specs
+
+
+def input_specs(cfg, shape_name: str):
+    """-> (cfg_with_overrides, specs_dict, kind in {train, prefill, decode})."""
+    cfg = apply_shape_overrides(cfg, shape_name)
+    kind = INPUT_SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return cfg, train_specs(cfg, shape_name), kind
+    if kind == "prefill":
+        return cfg, prefill_specs(cfg, shape_name), kind
+    return cfg, decode_specs(cfg, shape_name), kind

@@ -1,0 +1,30 @@
+"""Core DeCaPH: distributed DP-SGD with secure aggregation and leader rotation."""
+
+from repro.core.accountant import RDPAccountant, compute_epsilon, compute_rdp_sgm
+from repro.core.dp import (
+    DPConfig,
+    clip_factor,
+    dp_aggregate_gradients,
+    global_l2_norm,
+    noise_share,
+    per_example_clipped_grad_sum,
+    tree_add_noise,
+)
+from repro.core.leader import leader_schedule
+from repro.core.secagg import SecAggConfig, SecAggSession
+
+__all__ = [
+    "RDPAccountant",
+    "compute_epsilon",
+    "compute_rdp_sgm",
+    "DPConfig",
+    "clip_factor",
+    "dp_aggregate_gradients",
+    "global_l2_norm",
+    "noise_share",
+    "per_example_clipped_grad_sum",
+    "tree_add_noise",
+    "leader_schedule",
+    "SecAggConfig",
+    "SecAggSession",
+]

@@ -1,0 +1,260 @@
+"""DP gradient mechanics for DeCaPH (paper Algorithm 2 + Step 5 aggregation).
+
+Implements, as pure-JAX composable pieces:
+
+  * per-example gradient computation with L2 clipping (``vmap(grad)`` under a
+    ``lax.scan`` over microbatches so memory stays bounded at
+    ``microbatch_size x |params|``),
+  * ghost clipping for dense stacks (per-example norms without materialising
+    per-example weight gradients; the sequence case uses the Pallas
+    ``ghost_norm`` kernel),
+  * distributed noise shares: every participant adds N(0, (C sigma)^2 / H) so
+    the SecAgg **sum** carries the paper's N(0, (C sigma)^2),
+  * the full DeCaPH gradient aggregation (clip -> share-noise -> sum -> mean).
+
+All functions are jit/shard_map friendly; nothing allocates per-example copies
+of the full parameter pytree beyond one microbatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    """Privacy hyperparameters for one DeCaPH training run.
+
+    Attributes:
+      clip_norm: per-example L2 clipping norm C.
+      noise_multiplier: sigma; the aggregate noise is N(0, (C sigma)^2).
+      sample_rate: Poisson rate p = B / sum_h |D_h| agreed at preparation.
+      delta: DP delta (for accounting).
+      microbatch_size: examples per vmap'd microbatch in the scan.
+      dtype: accumulation dtype for clipped sums and noise.
+    """
+
+    clip_norm: float = 1.0
+    noise_multiplier: float = 1.0
+    sample_rate: float = 0.01
+    delta: float = 1e-5
+    microbatch_size: int = 16
+    dtype: Any = jnp.float32
+
+
+def global_l2_norm(tree: PyTree) -> jax.Array:
+    """L2 norm over every leaf of a pytree (fp32 accumulate)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def clip_factor(norm: jax.Array, clip_norm: float) -> jax.Array:
+    """min(1, C / norm) — the paper's line 3 scale (Algorithm 1 line 6)."""
+    return jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+
+
+def _tree_scale(tree: PyTree, s: jax.Array) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x * s.astype(x.dtype), tree)
+
+
+def _tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def _tree_zeros_like(tree: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, dtype), tree)
+
+
+def per_example_clipped_grad_sum(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    params: PyTree,
+    batch: PyTree,
+    *,
+    clip_norm: float,
+    microbatch_size: int = 16,
+    mask: jax.Array | None = None,
+    accum_dtype=jnp.float32,
+    constrain_grads: Callable[[PyTree], PyTree] | None = None,
+) -> tuple[PyTree, jax.Array]:
+    """Sum of per-example L2-clipped gradients (paper Algorithm 2, lines 1-3).
+
+    Args:
+      loss_fn: maps (params, example_batch_of_1) -> scalar loss for ONE example
+        (called under vmap; the leading axis of ``batch`` is the example axis).
+      params: parameter pytree.
+      batch: pytree of arrays with leading example axis of size B_local.
+      clip_norm: C.
+      microbatch_size: vmap width inside the scan (memory knob).
+      mask: optional (B_local,) 0/1 mask for Poisson-sampled batches padded to a
+        static shape — masked-out examples contribute nothing.
+      accum_dtype: dtype of the clipped-sum accumulator.
+
+    Returns:
+      (sum of clipped per-example grads, mean unclipped loss over real examples)
+    """
+    batch_size = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    if mask is None:
+        mask = jnp.ones((batch_size,), jnp.float32)
+    m = microbatch_size
+    if batch_size % m != 0:
+        # pad batch and mask to a multiple of the microbatch size
+        pad = m - batch_size % m
+        batch = jax.tree_util.tree_map(
+            lambda x: jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]),
+            batch,
+        )
+        mask = jnp.concatenate([mask, jnp.zeros((pad,), mask.dtype)])
+        batch_size += pad
+    n_micro = batch_size // m
+
+    grad_fn = jax.grad(loss_fn, argnums=0, has_aux=False)
+
+    def one_example(ex, w):
+        g = grad_fn(params, ex)
+        norm = global_l2_norm(g)
+        scale = clip_factor(norm, clip_norm) * w
+        g = _tree_scale(g, scale)
+        return g, loss_fn(params, ex) * w
+
+    def micro_step(carry, micro):
+        acc, loss_acc = carry
+        mb, mw = micro
+        g, losses = jax.vmap(one_example)(mb, mw)
+        g_sum = jax.tree_util.tree_map(
+            lambda x: jnp.sum(x.astype(accum_dtype), axis=0), g
+        )
+        if constrain_grads is not None:
+            # Force the accumulator onto the param sharding (FSDP+TP): the
+            # partitioner then reduce-scatters per microbatch — DeCaPH's
+            # secure sum — instead of materialising replicated grads.
+            g_sum = constrain_grads(g_sum)
+        return (_tree_add(acc, g_sum), loss_acc + jnp.sum(losses)), None
+
+    reshaped = jax.tree_util.tree_map(
+        lambda x: x.reshape((n_micro, m) + x.shape[1:]), batch
+    )
+    mask_r = mask.reshape((n_micro, m))
+    init = (_tree_zeros_like(params, accum_dtype), jnp.zeros((), accum_dtype))
+    (g_sum, loss_sum), _ = jax.lax.scan(micro_step, init, (reshaped, mask_r))
+    n_real = jnp.maximum(jnp.sum(mask), 1.0)
+    return g_sum, loss_sum / n_real
+
+
+def noise_share(
+    key: jax.Array,
+    template: PyTree,
+    *,
+    clip_norm: float,
+    noise_multiplier: float,
+    n_shares: int = 1,
+    dtype=jnp.float32,
+) -> PyTree:
+    """One participant's Gaussian noise share (Algorithm 2 line 4).
+
+    Each of ``n_shares`` participants draws N(0, (C sigma)^2 / H); the SecAgg
+    sum then carries exactly N(0, (C sigma)^2) — the paper's distributed-DP
+    trick. With ``n_shares=1`` this is the full single-draw noise used by the
+    SPMD fast path (identically distributed aggregate).
+    """
+    std = clip_norm * noise_multiplier / jnp.sqrt(float(n_shares))
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    keys = jax.random.split(key, len(leaves))
+    noised = [
+        jax.random.normal(k, x.shape, dtype) * std for k, x in zip(keys, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, noised)
+
+
+def tree_add_noise(tree: PyTree, key: jax.Array, *, clip_norm: float,
+                   noise_multiplier: float, n_shares: int = 1) -> PyTree:
+    """tree + one noise share (convenience)."""
+    nz = noise_share(
+        key, tree, clip_norm=clip_norm, noise_multiplier=noise_multiplier,
+        n_shares=n_shares,
+    )
+    return _tree_add(tree, nz)
+
+
+def dp_aggregate_gradients(
+    clipped_sums: list[PyTree],
+    noise_keys: list[jax.Array],
+    total_batch: jax.Array,
+    *,
+    cfg: DPConfig,
+) -> PyTree:
+    """Paper Step 5: SecAgg-sum of participants' noised clipped sums, / ||B^t||.
+
+    Host-level reference path (the federation runtime); each participant's
+    share is noised independently so the sum carries N(0, (C sigma)^2).
+    """
+    n = len(clipped_sums)
+    total = None
+    for share, key in zip(clipped_sums, noise_keys):
+        noised = tree_add_noise(
+            share, key, clip_norm=cfg.clip_norm,
+            noise_multiplier=cfg.noise_multiplier, n_shares=n,
+        )
+        total = noised if total is None else _tree_add(total, noised)
+    inv = 1.0 / jnp.maximum(total_batch.astype(jnp.float32), 1.0)
+    return _tree_scale(total, inv)
+
+
+# ---------------------------------------------------------------------------
+# Ghost clipping: per-example grad norms without per-example grads.
+# ---------------------------------------------------------------------------
+
+def ghost_norms_2d(a: jax.Array, g: jax.Array) -> jax.Array:
+    """Per-example sq-norm of the weight grad of a dense layer, 2D inputs.
+
+    For y = a @ W (a: [B, d_in], cotangent g: [B, d_out]) the per-example
+    weight gradient is outer(a_i, g_i) with Frobenius norm^2 =
+    |a_i|^2 * |g_i|^2 — O(B(d_in+d_out)) instead of O(B d_in d_out).
+    """
+    return jnp.sum(a.astype(jnp.float32) ** 2, -1) * jnp.sum(
+        g.astype(jnp.float32) ** 2, -1
+    )
+
+
+def ghost_norms_seq_ref(a: jax.Array, g: jax.Array) -> jax.Array:
+    """Per-example sq-norm for sequence inputs (pure-jnp oracle).
+
+    y = a @ W with a: [B, S, d_in], g: [B, S, d_out]; per-example grad is
+    A_i^T G_i with ||A^T G||_F^2 = sum_{s,t} (a_s . a_t)(g_s . g_t).
+    The Pallas kernel in ``repro.kernels.ghost_norm`` computes this blocked;
+    this reference is used when the kernel path is disabled.
+    """
+    aa = jnp.einsum("bsd,btd->bst", a.astype(jnp.float32), a.astype(jnp.float32))
+    gg = jnp.einsum("bsd,btd->bst", g.astype(jnp.float32), g.astype(jnp.float32))
+    return jnp.sum(aa * gg, axis=(1, 2))
+
+
+def ghost_clipped_grads_dense_stack(
+    forward_caches: list[tuple[jax.Array, jax.Array]],
+    per_example_norm_sq_extra: jax.Array | None,
+    clip_norm: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Clip factors from accumulated per-layer ghost norms.
+
+    Args:
+      forward_caches: list of (a_l, g_l) per dense layer (2D case).
+      per_example_norm_sq_extra: optional [B] extra norm^2 (e.g. biases).
+
+    Returns:
+      (per-example clip factors [B], per-example total norms [B]).
+    """
+    total = None
+    for a, g in forward_caches:
+        n = ghost_norms_2d(a, g) if a.ndim == 2 else ghost_norms_seq_ref(a, g)
+        total = n if total is None else total + n
+    if per_example_norm_sq_extra is not None:
+        total = total + per_example_norm_sq_extra
+    norms = jnp.sqrt(jnp.maximum(total, 0.0))
+    return clip_factor(norms, clip_norm), norms

@@ -1,0 +1,415 @@
+"""Ghost clipping for transformer stacks — the beyond-paper DP fast path.
+
+The paper's Algorithm 2 needs per-example gradient L2 norms.  The faithful
+implementation (``dp.per_example_clipped_grad_sum``) materialises one
+gradient per example, which at pod scale forces microbatch size 1 and
+re-gathers every FSDP weight shard once per example — the dominant
+collective cost in the train_4k dry-runs (EXPERIMENTS.md §Perf).
+
+This module computes the *exact* per-example norms inside ONE batched
+backward pass using a collector threaded through every parameterised op:
+
+  * each op forwards ``coll`` (a per-example [B] accumulator) unchanged;
+  * its custom-vjp backward ADDS its per-example grad-norm^2 contribution to
+    the collector's cotangent — for a dense layer that contribution is the
+    ghost identity  ||A_i^T G_i||_F^2 = sum_{s,t}(a_s.a_t)(g_s.g_t)
+    (the Pallas ``ghost_norm`` kernel on TPU), for RMSNorm scales and
+    embeddings the cheap exact forms below;
+  * one ``jax.vjp`` with cotangents (1.0, ones(B)) therefore yields the
+    summed gradients AND all per-example norms — no per-example gradient is
+    ever materialised, so the whole global batch runs in ONE forward/backward
+    (weight all-gathers amortise over the batch again).
+
+A second backward over the clip-weighted loss produces the clipped-sum
+gradient.  Supported family: dense decoder stacks (GQA attention + gated/
+plain FFN + RMSNorm/non-param LN + tied or untied head + standard/M-RoPE)
+— i.e. smollm / olmo / gemma / nemotron / qwen2-vl.  MoE and SSM mixers keep
+the faithful per-example path (their dispatch mixes examples, see DESIGN.md).
+
+Equivalence with vmap(grad) norms and with transformer.forward loss is
+enforced by tests/test_ghost_transformer.py.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models.layers import pname
+from repro.models.transformer import _apply_norm  # loss parity w/ main stack
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Collector ops
+# ---------------------------------------------------------------------------
+
+def _ghost_norm_pairs(a: jax.Array, g: jax.Array) -> jax.Array:
+    """Per-example ||A^T G||_F^2; dispatches 2D/3D; kernel on TPU."""
+    if a.ndim == 2:
+        from repro.core.dp import ghost_norms_2d
+
+        return ghost_norms_2d(a, g)
+    from repro.kernels.ghost_norm.ops import ghost_norm
+
+    return ghost_norm(a, g)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dp_dense(a: jax.Array, w: jax.Array, coll: jax.Array,
+             with_norms: bool = True):
+    """y = a @ w with the collector threaded through."""
+    return a @ w, coll
+
+
+def _dp_dense_fwd(a, w, coll, with_norms):
+    return (a @ w, coll), (a, w)
+
+
+def _dp_dense_bwd(with_norms, res, cot):
+    a, w = res
+    ybar, collbar = cot
+    abar = ybar @ w.T
+    if a.ndim == 3:
+        wbar = jnp.einsum("bsi,bso->io", a, ybar)
+    else:
+        wbar = jnp.einsum("bi,bo->io", a, ybar)
+    if with_norms:
+        # NOTE: no call-site upcast — the blocked ghost-norm converts tiles
+        # internally; converting the whole residual here materialises a
+        # second f32 copy of every saved activation (observed as a
+        # [L, B, S, D] f32 buffer in the nemotron dry-run, §Perf iter 1c).
+        collbar = collbar + _ghost_norm_pairs(a, ybar).astype(collbar.dtype)
+    return abar.astype(a.dtype), wbar.astype(w.dtype), collbar
+
+
+dp_dense.defvjp(_dp_dense_fwd, _dp_dense_bwd)
+
+
+def _rmsnorm_raw(scale, x, eps=1e-6):
+    # Variance in f32 (fused reduce); xhat stays in the input dtype so the
+    # layer scan never materialises an f32 copy of the residual stream
+    # (§Perf iter 1d: XLA saved convert(x) ACROSS the scan otherwise).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    xhat = x * inv
+    return xhat * scale.astype(x.dtype), xhat
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dp_rmsnorm(scale: jax.Array, x: jax.Array, coll: jax.Array,
+               with_norms: bool = True):
+    y, _ = _rmsnorm_raw(scale, x)
+    return y, coll
+
+
+def _dp_rmsnorm_fwd(scale, x, coll, with_norms):
+    y, _ = _rmsnorm_raw(scale, x)
+    return (y, coll), (scale, x)
+
+
+def _dp_rmsnorm_bwd(with_norms, res, cot):
+    scale, x = res
+    ybar, collbar = cot
+
+    def fn(s, xx):
+        return _rmsnorm_raw(s, xx)[0]
+
+    _, inner = jax.vjp(fn, scale, x)
+    sbar, xbar = inner(ybar)
+    if with_norms:
+        _, xhat = _rmsnorm_raw(scale, x)
+        # per-example scale grad: sum over sequence of ybar * xhat
+        axes = tuple(range(1, x.ndim - 1))
+        prod = ybar.astype(jnp.float32) * xhat.astype(jnp.float32)
+        g_scale = jnp.sum(prod, axis=axes) if x.ndim == 3 else prod
+        collbar = collbar + jnp.sum(jnp.square(g_scale), axis=-1).astype(collbar.dtype)
+    return sbar.astype(scale.dtype), xbar.astype(x.dtype), collbar
+
+
+dp_rmsnorm.defvjp(_dp_rmsnorm_fwd, _dp_rmsnorm_bwd)
+
+
+@jax.custom_vjp
+def dp_embed(emb: jax.Array, tokens: jax.Array, coll: jax.Array):
+    """y = emb[tokens] with exact per-example grad norms in the backward."""
+    return emb[tokens], coll
+
+
+def _dp_embed_fwd(emb, tokens, coll):
+    # dtype/shape carried via an empty slice (residuals must be JAX types)
+    return (emb[tokens], coll), (emb[:0], emb.shape[0], tokens)
+
+
+def _per_example_embed_norm(tokens_b: jax.Array, g_b: jax.Array) -> jax.Array:
+    """||scatter-add_{s: tok_s=r} g_s||^2 summed over rows r, one example.
+
+    Rows repeat when a token repeats, so group equal tokens (sort +
+    segment-sum) — O(S log S + S D), no [V, D] buffer.
+    """
+    s = tokens_b.shape[0]
+    order = jnp.argsort(tokens_b)
+    tok_sorted = tokens_b[order]
+    g_sorted = g_b[order].astype(jnp.float32)
+    new_seg = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32),
+         (tok_sorted[1:] != tok_sorted[:-1]).astype(jnp.int32)]
+    )
+    seg_ids = jnp.cumsum(new_seg) - 1
+    sums = jax.ops.segment_sum(g_sorted, seg_ids, num_segments=s)
+    return jnp.sum(jnp.square(sums))
+
+
+def _dp_embed_bwd(res, cot):
+    emb_proto, vocab, tokens = res
+    ybar, collbar = cot
+    embbar = jnp.zeros((vocab,) + emb_proto.shape[1:], jnp.float32).at[
+        tokens
+    ].add(ybar.astype(jnp.float32))
+    norms = jax.vmap(_per_example_embed_norm)(tokens, ybar)
+    return (embbar.astype(emb_proto.dtype), None,
+            collbar + norms.astype(collbar.dtype))
+
+
+dp_embed.defvjp(_dp_embed_fwd, _dp_embed_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Ghost forward for dense decoder stacks (loss-identical to transformer.py)
+# ---------------------------------------------------------------------------
+
+def _supported(cfg) -> bool:
+    if cfg.is_encoder_decoder or cfg.n_experts:
+        return False
+    return all(
+        spec.mixer == "attn" and spec.ffn == "dense" and not spec.cross_attn
+        for _, pattern in cfg.stack for spec in pattern
+    )
+
+
+def _norm_g(cfg, p, x, coll, with_norms):
+    if cfg.norm == "rmsnorm":
+        return dp_rmsnorm(p[pname("scale", "embed")], x, coll, with_norms)
+    return _apply_norm(cfg, p, x), coll  # non-parametric: nothing to collect
+
+
+def _attn_g(cfg, p, x, positions, mrope_positions, window, coll, with_norms):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, coll = dp_dense(x, p[pname("wq", "embed", "qheads")], coll, with_norms)
+    k, coll = dp_dense(x, p[pname("wk", "embed", "kv_heads")], coll, with_norms)
+    v, coll = dp_dense(x, p[pname("wv", "embed", "kv_heads")], coll, with_norms)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.rope_type == "mrope" and mrope_positions is not None:
+        from repro.models.layers import apply_mrope
+
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_type != "none":
+        from repro.models.layers import apply_rope
+
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    from repro.models.layers import shard as _shard
+
+    q = _shard(q, "attn_batch", None, "heads", None)
+    k = _shard(k, "attn_batch", None, None, None)
+    v = _shard(v, "attn_batch", None, None, None)
+    if getattr(cfg, "use_flash", False):
+        out = attn_lib._sdpa_blocked(q, k, v, causal=True, window=window)
+    else:
+        mask = attn_lib._causal_mask(s, s, 0, window)
+        out = attn_lib._sdpa(q, k, v, mask)
+    out = out.reshape(b, s, h * hd)
+    y, coll = dp_dense(out, p[pname("wo", "qheads", "embed")], coll, with_norms)
+    return y, coll
+
+
+def _ffn_g(cfg, p, x, coll, with_norms):
+    up, coll = dp_dense(x, p[pname("w_up", "embed", "mlp")], coll, with_norms)
+    if cfg.ffn_kind in ("swiglu", "geglu"):
+        gate, coll = dp_dense(x, p[pname("w_gate", "embed", "mlp")], coll,
+                              with_norms)
+        act = jax.nn.silu if cfg.ffn_kind == "swiglu" else jax.nn.gelu
+        h = act(gate) * up
+    else:
+        from repro.models.layers import act_fn
+
+        h = act_fn(cfg.ffn_kind)(up)
+    y, coll = dp_dense(h, p[pname("w_down", "mlp", "embed")], coll, with_norms)
+    return y, coll
+
+
+def forward_ghost(cfg, params, batch, coll, *, with_norms: bool = True):
+    """Loss-identical ghost forward -> (per-example mean-CE [B], coll)."""
+    assert _supported(cfg), f"{cfg.name}: ghost path supports dense stacks"
+    tokens = batch["tokens"]
+    emb = params[pname("embed", "vocab", "embed")]
+    x, coll = dp_embed(emb, tokens, coll)
+    x = x.astype(cfg.cdtype)
+    if cfg.arch_type == "vlm" and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(cfg.cdtype)
+        x = jnp.concatenate([ve, x], axis=1)
+    b, s, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    mrope_positions = batch.get("mrope_positions")
+    if cfg.rope_type == "mrope" and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+
+    window = cfg.sliding_window
+    from repro.models.layers import shard
+
+    def layer_body(p, x, coll):
+        h, coll = _norm_g(cfg, p["norm1"], x, coll, with_norms)
+        h, coll = _attn_g(cfg, p["mixer"], h, positions, mrope_positions,
+                          window, coll, with_norms)
+        x = x + h
+        h, coll = _norm_g(cfg, p["norm2"], x, coll, with_norms)
+        h, coll = _ffn_g(cfg, p["ffn"], h, coll, with_norms)
+        x = shard(x + h, "batch", "seq", None)
+        return x, coll
+
+    for gi, (repeat, pattern) in enumerate(cfg.stack):
+        stacked = params[f"group{gi}"]
+        if cfg.scan_layers and repeat > 1:
+            # The collector is just a scan carry: scan's transpose
+            # accumulates each layer's custom-vjp contribution into coll-bar.
+            def scan_body(carry, lp):
+                xx, cc = carry
+                body = layer_body
+                if cfg.remat:
+                    body = jax.checkpoint(layer_body, static_argnums=())
+                xx, cc = body(lp["e0"], xx, cc)
+                return (xx, cc), None
+
+            (x, coll), _ = jax.lax.scan(scan_body, (x, coll), stacked)
+        else:
+            for r in range(repeat):
+                lp = jax.tree_util.tree_map(lambda t: t[r], stacked)
+                if cfg.remat:
+                    x, coll = jax.checkpoint(
+                        lambda xx, cc, pp=lp["e0"]: layer_body(pp, xx, cc)
+                    )(x, coll)
+                else:
+                    x, coll = layer_body(lp["e0"], x, coll)
+    x, coll = _norm_g(cfg, params["final_norm"], x, coll, with_norms)
+    if cfg.tie_embeddings:
+        # tied head: a dense against emb^T; its ghost contribution combines
+        # with the embedding-gather contribution on the SAME parameter.
+        # Exactness requires the cross term; we treat the head and gather
+        # contributions as independent (upper bound crossed by <= 2ab term).
+        # For the untied archs (nemotron) this is exact.
+        logits, coll = dp_dense(
+            x, params[pname("embed", "vocab", "embed")].T.astype(cfg.cdtype),
+            coll, with_norms,
+        )
+    else:
+        logits, coll = dp_dense(
+            x, params[pname("head", "embed", "vocab")].astype(cfg.cdtype),
+            coll, with_norms,
+        )
+    labels = batch["labels"]
+    if cfg.arch_type == "vlm" and "vision_embeds" in batch:
+        logits = logits[:, -labels.shape[1]:]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels_c[..., None], axis=-1
+    )[..., 0]
+    per_ex = jnp.sum((logz - gold) * mask, axis=-1) / jnp.maximum(
+        jnp.sum(mask, axis=-1), 1.0
+    )
+    return per_ex, coll
+
+
+def _chunked(batch: PyTree, n_chunks: int) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda t: t.reshape((n_chunks, t.shape[0] // n_chunks) + t.shape[1:]),
+        batch,
+    )
+
+
+def ghost_clipped_grad_sum(cfg, params, batch, *, clip_norm: float,
+                           chunk_size: int | None = None,
+                           constrain_grads=None):
+    """Exact clipped-sum gradients in 2 batched passes (no per-example grads).
+
+    ``chunk_size`` bounds residual-activation memory: the batch is processed
+    in ``B/chunk_size`` scanned chunks (weight gathers scale with the chunk
+    count, not the example count — the §Perf win over the faithful path).
+
+    Returns (grad_sum pytree, mean loss, per-example norms).
+    """
+    b = batch["tokens"].shape[0]
+    chunk = min(chunk_size or b, b)
+    assert b % chunk == 0, "batch must divide ghost chunk size"
+    n_chunks = b // chunk
+
+    def norms_of_chunk(bchunk):
+        def f(p, coll):
+            per_ex, coll_out = forward_ghost(cfg, p, bchunk, coll,
+                                             with_norms=True)
+            return jnp.sum(per_ex), coll_out
+
+        coll0 = jnp.zeros((chunk,), jnp.float32)
+        (loss_sum, _), vjp_fn = jax.vjp(f, params, coll0)
+        _, collbar = vjp_fn((jnp.asarray(1.0), jnp.ones((chunk,), jnp.float32)))
+        norms = jnp.sqrt(jnp.maximum(collbar - 1.0, 0.0))  # seed rides along
+        return norms, loss_sum
+
+    def grads_of_chunk(bchunk, factors):
+        def weighted(p):
+            per_ex, _ = forward_ghost(
+                cfg, p, bchunk, jnp.zeros((chunk,), jnp.float32),
+                with_norms=False,
+            )
+            return jnp.sum(per_ex * factors)
+
+        return jax.grad(weighted)(params)
+
+    if n_chunks == 1:
+        norms, loss_sum = norms_of_chunk(batch)
+        factors = jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12))
+        grads = grads_of_chunk(batch, factors)
+        return grads, loss_sum / b, norms
+
+    chunks = _chunked(batch, n_chunks)
+
+    def scan_norms(carry, bchunk):
+        norms, loss_sum = norms_of_chunk(bchunk)
+        return carry + loss_sum, norms
+
+    loss_total, norms_all = jax.lax.scan(
+        scan_norms, jnp.zeros(()), chunks
+    )
+    norms = norms_all.reshape(-1)
+    factors_all = jnp.minimum(
+        1.0, clip_norm / jnp.maximum(norms_all, 1e-12)
+    )
+
+    def scan_grads(acc, args):
+        bchunk, factors = args
+        g = grads_of_chunk(bchunk, factors)
+        g = jax.tree_util.tree_map(
+            lambda a_, g_: a_ + g_.astype(jnp.float32), acc, g
+        )
+        if constrain_grads is not None:
+            g = constrain_grads(g)
+        return g, None
+
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    grads, _ = jax.lax.scan(scan_grads, zeros, (chunks, factors_all))
+    return grads, loss_total / b, norms

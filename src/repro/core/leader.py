@@ -1,0 +1,51 @@
+"""Rotating-leader selection (paper Step 1 / Decentralisation section).
+
+The leader only *facilitates* (aggregates + redistributes); under the paper's
+honest-but-curious model a shared-seed pseudo-random schedule is sufficient —
+every participant derives the same schedule locally, so no coordination
+messages are needed beyond the initial seed agreement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def leader_schedule(
+    n_participants: int,
+    n_rounds: int,
+    *,
+    seed: int = 0,
+    strategy: str = "uniform",
+) -> np.ndarray:
+    """Leader index per communication round.
+
+    strategies:
+      uniform     — paper default: i.i.d. uniform over participants each round.
+      round_robin — deterministic rotation (fairest load; beyond-paper option).
+      balanced    — random permutations chained (uniform marginals, exact
+                    long-run fairness; beyond-paper option).
+    """
+    if n_participants <= 0 or n_rounds < 0:
+        raise ValueError("need n_participants > 0, n_rounds >= 0")
+    if strategy == "uniform":
+        key = jax.random.key(seed)
+        return np.asarray(
+            jax.random.randint(key, (n_rounds,), 0, n_participants)
+        )
+    if strategy == "round_robin":
+        return np.arange(n_rounds) % n_participants
+    if strategy == "balanced":
+        rng = np.random.default_rng(seed)
+        out = []
+        while len(out) < n_rounds:
+            out.extend(rng.permutation(n_participants).tolist())
+        return np.asarray(out[:n_rounds])
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def leader_load(schedule: np.ndarray, n_participants: int) -> np.ndarray:
+    """Rounds facilitated per participant (fairness diagnostics)."""
+    return np.bincount(schedule, minlength=n_participants)

@@ -1,0 +1,18 @@
+"""Synthetic multi-silo data pipeline (real datasets are access-gated)."""
+
+from repro.data.synthetic import (
+    make_gemini_like,
+    make_pancreas_like,
+    make_xray_like,
+    make_lm_stream,
+)
+from repro.data.partition import dirichlet_partition, sized_partition
+
+__all__ = [
+    "make_gemini_like",
+    "make_pancreas_like",
+    "make_xray_like",
+    "make_lm_stream",
+    "dirichlet_partition",
+    "sized_partition",
+]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+  ghost_norm       — per-example ||A^T G||_F^2 (DP-SGD ghost clipping)
+  flash_attention  — blocked causal/sliding-window attention (prefill)
+  decode_attention — single-query attention vs long KV (serving)
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with interpret=True against the pure-jnp oracles in each
+``ref.py``.
+"""

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for single-query decode attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, index, *, window: int | None = None):
+    """q: [B,1,H,D]; k,v: [B,L,KV,D]; index: scalar current position.
+
+    Attends to cache positions <= index (within the sliding window if set).
+    Returns [B,1,H,D].
+    """
+    b, _, h, d = q.shape
+    l, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, kv, group, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,blkd->bkgl", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    kj = jnp.arange(l)
+    ok = kj <= index
+    if window is not None:
+        ok &= kj > index - window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for flash attention with CPU fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    force_kernel: bool = False) -> jax.Array:
+    """Blocked attention. TPU -> Pallas; CPU -> oracle (interpret in tests)."""
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_k=block_k)
+    if force_kernel:
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=True)
+    return attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for blocked attention (causal / sliding window, GQA)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None) -> jnp.ndarray:
+    """q: [B,S,H,D]; k,v: [B,L,KV,D] (KV divides H). Returns [B,S,H,D]."""
+    b, s, h, d = q.shape
+    l, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, s, kv, group, d).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,blkd->bkgsl", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(l)[None, :]
+    ok = jnp.ones((s, l), bool)
+    if causal:
+        ok &= kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsl,blkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.ghost_norm.ops import ghost_norm
+from repro.kernels.ghost_norm.ref import ghost_norm_ref
+
+__all__ = ["ghost_norm", "ghost_norm_ref"]

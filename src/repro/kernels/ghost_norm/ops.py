@@ -1,0 +1,62 @@
+"""Jit'd public wrapper for the ghost-norm kernel with CPU fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ghost_norm.kernel import ghost_norm_pallas
+from repro.kernels.ghost_norm.ref import ghost_norm_ref
+
+
+def ghost_norm_blocked(a: jax.Array, g: jax.Array,
+                       block: int = 256) -> jax.Array:
+    """The kernel's algorithm in plain XLA: scan over (s, t) tiles so the
+    Gram working set stays [B, bs, bt] instead of [B, S, S].  Used on
+    non-TPU backends (and in the dry-run, so compile-time memory matches the
+    TPU kernel's VMEM behaviour rather than the naive oracle's)."""
+    b, s, _ = a.shape
+    block = min(block, s)
+    if s % block != 0:
+        pad = block - s % block
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))
+        s = a.shape[1]
+    n = s // block
+    a_t = a.reshape(b, n, block, a.shape[-1]).swapaxes(0, 1)
+    g_t = g.reshape(b, n, block, g.shape[-1]).swapaxes(0, 1)
+
+    def outer(acc, st):
+        a_s, g_s = st  # [B, bs, d]
+
+        def inner(acc2, tt):
+            a_tt, g_tt = tt
+            aa = jnp.einsum("bsd,btd->bst", a_s.astype(jnp.float32),
+                            a_tt.astype(jnp.float32))
+            gg = jnp.einsum("bsd,btd->bst", g_s.astype(jnp.float32),
+                            g_tt.astype(jnp.float32))
+            return acc2 + jnp.sum(aa * gg, axis=(1, 2)), None
+
+        acc, _ = jax.lax.scan(inner, acc, (a_t, g_t))
+        return acc, None
+
+    out, _ = jax.lax.scan(outer, jnp.zeros((b,), jnp.float32), (a_t, g_t))
+    return out
+
+
+def ghost_norm(a: jax.Array, g: jax.Array, *, block_s: int = 128,
+               block_t: int = 128, force_kernel: bool = False) -> jax.Array:
+    """Per-example ghost gradient sq-norms.
+
+    TPU -> Pallas kernel; elsewhere -> the blocked XLA equivalent (same
+    tiling, bounded memory); ``force_kernel`` runs interpret mode (tests).
+    """
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return ghost_norm_pallas(a, g, block_s=block_s, block_t=block_t)
+    if force_kernel:
+        return ghost_norm_pallas(a, g, block_s=block_s, block_t=block_t,
+                                 interpret=True)
+    if a.ndim == 3 and a.shape[1] <= 512:
+        return ghost_norm_ref(a, g)
+    return ghost_norm_blocked(a, g)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the ghost-norm kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ghost_norm_ref(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Per-example ||A_i^T G_i||_F^2 for a dense layer y = a @ W.
+
+    a: [B, S, d_in] activations; g: [B, S, d_out] output cotangents.
+    ||A^T G||_F^2 = sum_{s,t} (a_s . a_t)(g_s . g_t).
+
+    Returns [B] float32.
+    """
+    a32, g32 = a.astype(jnp.float32), g.astype(jnp.float32)
+    aa = jnp.einsum("bsd,btd->bst", a32, a32)
+    gg = jnp.einsum("bsd,btd->bst", g32, g32)
+    return jnp.sum(aa * gg, axis=(1, 2))

@@ -1,0 +1,34 @@
+"""Production mesh factory (function, not constant — never touches jax device
+state at import time)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: 16x16 per pod; 2 pods multi-pod.
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+    DeCaPH maps hospitals onto ("pod", "data") — the secure-aggregation sum is
+    the gradient reduction over those axes (DESIGN.md §3).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, multi_pod: bool = False):
+    """Small mesh for CPU tests (requires XLA host device count >= product)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes carrying the batch/participant dimension."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a == "model")

@@ -1,0 +1,76 @@
+"""Re-run the roofline analysis over cached HLO artifacts (no recompiles).
+
+Usage: PYTHONPATH=src python -m repro.launch.reanalyze [--dir DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard as zstd
+
+from repro.launch.roofline import HLOAnalyzer, roofline_terms
+
+
+def reanalyze_file(json_path: str) -> dict | None:
+    hlo_path = json_path.replace(".json", ".hlo.zst")
+    if not os.path.exists(hlo_path):
+        return None
+    with open(json_path) as f:
+        rec = json.load(f)
+    with open(hlo_path, "rb") as f:
+        text = zstd.ZstdDecompressor().decompress(f.read()).decode()
+    an = HLOAnalyzer(text)
+    tot = an.totals()
+    n = rec["n_chips"]
+    param_bytes = an.entry_param_bytes()
+    rec.update(
+        corrected_flops=tot.flops * n,
+        collective_bytes=tot.coll_bytes * n,
+        collective_by_kind={k: v * n for k, v in tot.coll_by_kind.items()},
+        toplevel_result_bytes=tot.result_bytes * n,
+        dot_bytes=tot.dot_bytes * n,
+        dus_bytes=tot.dus_bytes * n,
+        entry_param_bytes=param_bytes,
+        hbm_traffic_model_bytes=(
+            tot.dot_bytes + tot.dus_bytes + tot.coll_bytes + param_bytes
+        ) * n,
+    )
+    rec["roofline"] = roofline_terms(
+        flops=rec["corrected_flops"],
+        hbm_bytes=rec["hbm_traffic_model_bytes"],
+        coll_bytes=rec["collective_bytes"],
+        n_chips=n,
+    )
+    mf = rec.get("model_flops")
+    rec["useful_flops_ratio"] = (
+        mf / rec["corrected_flops"] if mf and rec["corrected_flops"] else None
+    )
+    with open(json_path, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..",
+        "benchmarks", "artifacts", "dryrun"))
+    args = p.parse_args()
+    n = 0
+    for jp in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = reanalyze_file(jp)
+        if rec:
+            n += 1
+            r = rec["roofline"]
+            print(f"{rec['arch']:20s} {rec['shape']:12s} {rec['mesh']:9s} "
+                  f"cmp={r['compute_s']:.2e} mem={r['memory_s']:.2e} "
+                  f"col={r['collective_s']:.2e} -> {r['bottleneck']}")
+    print(f"reanalyzed {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

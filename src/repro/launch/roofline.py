@@ -1,0 +1,310 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once** (verified
+empirically — scan vs unrolled differ by exactly the trip count), so layer
+scans would hide ~L× of the model's FLOPs.  This module therefore parses the
+post-SPMD optimized HLO text and computes *trip-count-corrected* totals:
+
+  * dot FLOPs: 2 · |result| · |contracted dims| per dot, recursively expanded
+    through fusions / calls / while bodies (× known_trip_count);
+  * collective bytes: per-device result bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute ops (post-partitioning
+    shapes are already per-shard), with a 2x wire factor for all-reduce
+    (ring = reduce-scatter + all-gather);
+  * HBM traffic model: sum of top-level op result bytes (fusion boundaries
+    are materialisation points) + entry parameter bytes, ×(1 read + 1 write
+    amortised) — documented approximation, cross-checked against
+    cost_analysis bytes.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per link (ICI)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Cost:
+    flops: float = 0.0
+    coll_bytes: float = 0.0
+    result_bytes: float = 0.0
+    dot_bytes: float = 0.0      # matmul operand+result traffic
+    dus_bytes: float = 0.0      # dynamic-update-slice (KV-cache writes)
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "_Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.result_bytes += other.result_bytes * mult
+        self.dot_bytes += other.dot_bytes * mult
+        self.dus_bytes += other.dus_bytes * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+
+
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\("
+)
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\]))")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(([^)]*(?:\([^)]*\))?[^)]*)\))?.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[="\{:\s]+n["\{:\s]*"?(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+class HLOAnalyzer:
+    """Trip-count-corrected cost analysis from optimized HLO text."""
+
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[str]] = {}
+        self.entry: str | None = None
+        self._parse_blocks(hlo_text)
+        self._memo: dict[str, _Cost] = {}
+
+    def _parse_blocks(self, text: str) -> None:
+        cur_name, cur_lines = None, []
+        for line in text.splitlines():
+            if not line.startswith(" ") and line.rstrip().endswith("{"):
+                m = _COMP_HEADER_RE.match(line.strip())
+                if m:
+                    cur_name = m.group(1)
+                    cur_lines = [line]
+                    if line.lstrip().startswith("ENTRY"):
+                        self.entry = cur_name
+                    continue
+            if cur_name is not None:
+                cur_lines.append(line)
+                if line.rstrip() == "}":
+                    self.computations[cur_name] = cur_lines
+                    cur_name = None
+        if self.entry is None and self.computations:
+            # fall back: ENTRY may carry a different formatting
+            for name in self.computations:
+                if "main" in name:
+                    self.entry = name
+                    break
+
+    def _symbols(self, lines: list[str]) -> dict[str, str]:
+        """name -> type string (params + instruction results)."""
+        sym: dict[str, str] = {}
+        header = lines[0]
+        for m in _PARAM_RE.finditer(header):
+            sym[m.group(1)] = m.group(2)
+        for line in lines[1:]:
+            m = _INSTR_RE.match(line)
+            if m:
+                sym[m.group(1)] = m.group(2)
+        return sym
+
+    def cost_of(self, comp: str) -> _Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = _Cost()  # cycle guard
+        lines = self.computations.get(comp, [])
+        sym = self._symbols(lines)
+        total = _Cost()
+        for line in lines[1:]:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+            rbytes = _shape_bytes(type_str)
+            total.result_bytes += rbytes
+            if opcode == "dot":
+                flops = self._dot_flops(line, type_str, sym)
+                total.flops += flops
+                total.dot_bytes += rbytes + self._operand_bytes(line, sym)
+            elif opcode == "dynamic-update-slice":
+                # KV-cache style in-place update: the written slice + read
+                # dominate; count the updated operand once.
+                total.dus_bytes += rbytes
+            elif opcode == "convolution":
+                total.flops += 2 * max(
+                    1, int(rbytes / max(_DTYPE_BYTES.get("f32", 4), 1))
+                )  # coarse: counted as >=1 flop per output elem pair
+            elif opcode.startswith(_COLLECTIVES):
+                kind = next(c for c in _COLLECTIVES if opcode.startswith(c))
+                wire = 2.0 if kind == "all-reduce" else 1.0
+                total.coll_bytes += rbytes * wire
+                total.coll_by_kind[kind] = (
+                    total.coll_by_kind.get(kind, 0.0) + rbytes * wire
+                )
+            elif opcode == "while":
+                trip = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                if bm:
+                    total.add(self.cost_of(bm.group(1)), trip)
+            elif opcode in ("fusion", "call", "map", "reduce", "reduce-window",
+                            "scatter", "select-and-scatter", "sort",
+                            "conditional", "custom-call", "async-start"):
+                for cm in _CALLS_RE.finditer(line):
+                    callee = cm.group(1)
+                    if callee in self.computations and callee != comp:
+                        total.add(self.cost_of(callee), 1)
+        self._memo[comp] = total
+        return total
+
+    def _operand_bytes(self, line: str, sym: dict[str, str]) -> float:
+        """Sum of operand tensor bytes for an instruction's call arguments."""
+        m = re.search(r"\b[\w\-]+\(([^)]*)\)", line)
+        if not m:
+            return 0.0
+        total = 0.0
+        for om in _OPERAND_RE.finditer(m.group(1)):
+            total += _shape_bytes(sym.get(om.group(1), ""))
+        return total
+
+    def _dot_flops(self, line: str, result_type: str, sym: dict[str, str]) -> float:
+        res_dims = _shape_dims(result_type)
+        res_n = 1
+        for d in res_dims:
+            res_n *= d
+        cm = _CONTRACT_RE.search(line)
+        # first operand name after "dot("
+        try:
+            args = line.split("dot(", 1)[1]
+        except IndexError:
+            return 0.0
+        om = _OPERAND_RE.search(args)
+        contract = 1
+        if cm and om:
+            lhs_type = sym.get(om.group(1), "")
+            lhs_dims = _shape_dims(lhs_type)
+            idxs = [int(i) for i in cm.group(1).split(",") if i != ""]
+            for i in idxs:
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+        return 2.0 * res_n * contract
+
+    def totals(self) -> _Cost:
+        if self.entry is None:
+            return _Cost()
+        return self.cost_of(self.entry)
+
+    def entry_param_bytes(self) -> int:
+        lines = self.computations.get(self.entry or "", [])
+        if not lines:
+            return 0
+        return _shape_bytes(lines[0])
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+def roofline_terms(
+    *, flops: float, hbm_bytes: float, coll_bytes: float, n_chips: int
+) -> dict[str, float]:
+    compute_t = flops / (n_chips * PEAK_FLOPS)
+    memory_t = hbm_bytes / (n_chips * HBM_BW)
+    coll_t = coll_bytes / (n_chips * LINK_BW)
+    terms = {"compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    return terms
+
+
+def model_flops(cfg, shape: dict, kind: str) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) / 2·N_active per token (decode)."""
+    from repro.configs.base import active_param_count
+
+    n_active = active_param_count(cfg)
+    b, s = shape["global_batch"], shape["seq_len"]
+    if kind == "train":
+        return 6.0 * n_active * b * s
+    if kind == "prefill":
+        return 2.0 * n_active * b * s
+    return 2.0 * n_active * b  # one token per sequence
+
+
+def analyze_compiled(compiled, lowered=None) -> dict[str, Any]:
+    """Extract corrected totals + raw cost/memory analysis from a compiled
+    executable."""
+    text = compiled.as_text()
+    an = HLOAnalyzer(text)
+    tot = an.totals()
+    raw = {}
+    try:
+        ca = compiled.cost_analysis()
+        raw = {k: float(v) for k, v in ca.items()
+               if isinstance(v, (int, float)) and k in
+               ("flops", "bytes accessed", "transcendentals",
+                "utilization operand 0 {}", "optimal_seconds")}
+    except Exception as e:  # pragma: no cover
+        raw = {"error": str(e)}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+    param_bytes = an.entry_param_bytes()
+    # HBM traffic model for the TPU target: matmul operand+result traffic,
+    # KV-cache updates, collective buffers and one read of the entry params.
+    # Elementwise chains are assumed fused (kept in VMEM) on TPU; the blanket
+    # sum of every top-level op result is recorded separately for reference.
+    hbm_traffic = tot.dot_bytes + tot.dus_bytes + tot.coll_bytes + param_bytes
+    return {
+        "corrected_flops": tot.flops,
+        "collective_bytes": tot.coll_bytes,
+        "collective_by_kind": tot.coll_by_kind,
+        "toplevel_result_bytes": tot.result_bytes,
+        "dot_bytes": tot.dot_bytes,
+        "dus_bytes": tot.dus_bytes,
+        "entry_param_bytes": param_bytes,
+        "hbm_traffic_model_bytes": hbm_traffic,
+        "raw_cost_analysis": raw,
+        "memory_analysis": mem,
+    }

@@ -1,0 +1,253 @@
+"""Logical-axis -> mesh sharding rules (GSPMD via NamedSharding).
+
+Param specs are derived from the axis names encoded in parameter keys
+(``models.layers.pname``), so they cannot diverge from the param tree.
+Policy:
+
+  * tensor parallel ("model"): mlp, qheads, kv_heads, vocab, inner (Mamba),
+    experts (expert parallelism);
+  * FSDP ("data", optionally +"pod"): the embed dim of every weight — ZeRO-3
+    style; gradient reduce-scatters over data are exactly DeCaPH's secure sum;
+  * anything non-divisible falls back to replication (e.g. smollm's 15 heads
+    stay replicated while its flattened 960-wide q projection shards).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.layers import logical_axes
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = True            # shard embed dim over data axes
+    fsdp_over_pod: bool = False  # include "pod" in the FSDP axes
+    tp: bool = True              # shard mlp/heads/vocab/experts over model
+    shard_experts: bool = True
+    batch_over_pod: bool = True
+    # For archs whose head count cannot shard over "model" (smollm's 15
+    # heads): reshard the attention batch over (data, model) instead of
+    # replicating the quadratic attention work on every model rank (§Perf).
+    attn_batch_over_model: bool = False
+
+
+def _axis_rules(mesh, policy: ShardingPolicy) -> dict[str, Any]:
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    data_axes: tuple[str, ...] = tuple(
+        a for a in (("pod",) if (has_pod and policy.batch_over_pod) else ())
+    ) + ("data",)
+    fsdp_axes = (("pod", "data") if (has_pod and policy.fsdp_over_pod)
+                 else ("data",)) if policy.fsdp else None
+    model = "model" if policy.tp else None
+    return {
+        "batch": data_axes,
+        "embed": fsdp_axes,
+        "mlp": model,
+        "qheads": model,
+        "kv_heads": model,
+        "heads": model,
+        "vocab": model,
+        "experts": model if policy.shard_experts else None,
+        "expert_mlp": None,
+        "inner": model,
+        "dc": None,
+        "rope": None,
+        "state": None,
+        "conv": None,
+        "layers": None,
+        "kv_seq": ("data",),
+        None: None,
+    }
+
+
+def _mesh_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for_leaf(key: str, shape: tuple[int, ...], mesh,
+                  rules: dict) -> P:
+    axes = logical_axes(key, len(shape))
+    entries = []
+    used: set = set()
+    for dim, ax in zip(shape, axes):
+        mesh_ax = rules.get(ax)
+        flat = tuple(mesh_ax) if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        if (
+            mesh_ax is None
+            or dim % _mesh_size(mesh, mesh_ax) != 0
+            or any(a in used for a in flat)
+        ):
+            entries.append(None)
+        else:
+            entries.append(mesh_ax)
+            used.update(flat)
+    return P(*entries)
+
+
+def param_specs(params: PyTree, mesh, policy: ShardingPolicy) -> PyTree:
+    """NamedSharding tree matching ``params`` (works on SDS trees too)."""
+    rules = _axis_rules(mesh, policy)
+
+    def walk(path, leaf):
+        key = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        spec = spec_for_leaf(key, tuple(leaf.shape), mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def activation_rules(mesh, policy: ShardingPolicy, *, global_batch: int,
+                     shard_kv_seq: bool = False,
+                     per_example: bool = False) -> dict:
+    """Rules consumed by ``models.layers.shard`` during forward.
+
+    per_example=True is the DP microbatch path: the (tiny) per-example batch
+    dim stays unsharded and the *sequence* shards over data instead, so one
+    example's forward/backward still spans the whole pod.
+    """
+    rules = _axis_rules(mesh, policy)
+    batch_axes = rules["batch"]
+    seq_axes = None
+    if per_example or global_batch % _mesh_size(mesh, batch_axes) != 0:
+        batch_axes = None  # e.g. long_500k batch=1 -> shard KV seq instead
+        seq_axes = ("data",)
+    attn_batch = batch_axes
+    if policy.attn_batch_over_model and batch_axes is not None:
+        flat = tuple(batch_axes) if isinstance(batch_axes, tuple) else (batch_axes,)
+        cand = flat + ("model",)
+        if global_batch % _mesh_size(mesh, cand) == 0:
+            attn_batch = cand
+    act = {
+        "__mesh__": mesh,
+        "batch": batch_axes,
+        "attn_batch": attn_batch,
+        "seq": seq_axes,
+        "mlp": rules["mlp"],
+        "heads": rules["heads"],
+        "vocab": rules["vocab"],
+        "experts": rules["experts"],
+        "kv_seq": ("data",) if shard_kv_seq else None,
+    }
+    return act
+
+
+def batch_specs(batch_sds: PyTree, mesh, policy: ShardingPolicy) -> PyTree:
+    """Shard every batch leaf's leading (example) axis over the data axes."""
+    rules = _axis_rules(mesh, policy)
+    batch_axes = rules["batch"]
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        b = leaf.shape[0]
+        if b % _mesh_size(mesh, batch_axes) == 0:
+            return NamedSharding(mesh, P(batch_axes, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree_util.tree_map(one, batch_sds)
+
+
+def cache_specs(cache_sds: PyTree, mesh, policy: ShardingPolicy, *,
+                global_batch: int) -> PyTree:
+    """KV-cache sharding: batch over data when divisible; otherwise the cache
+    *sequence* shards over data (long_500k) — attention softmax reductions
+    then lower to the LSE-merge collectives."""
+    rules = _axis_rules(mesh, policy)
+    batch_axes = rules["batch"]
+    batch_ok = global_batch % _mesh_size(mesh, batch_axes) == 0
+    model_ok = policy.tp
+
+    def walk(path, leaf):
+        key = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        nd = leaf.ndim
+        # stacked caches carry a leading layers dim
+        lead = [None]
+        shape = leaf.shape[1:]
+        nd_body = nd - 1
+        if key in ("k", "v"):          # [B, L, KV, hd]
+            b, l, kvh, hd = shape
+            spec = [None, None, None, None]
+            if batch_ok:
+                spec[0] = batch_axes
+            elif l % mesh.shape["data"] == 0:
+                spec[1] = ("data",)
+            if model_ok and kvh % mesh.shape["model"] == 0:
+                spec[2] = "model"
+            return NamedSharding(mesh, P(*lead, *spec))
+        if key in ("c", "kr"):          # MLA latents [B, L, d]
+            b, l, d = shape
+            spec = [None, None, None]
+            if batch_ok:
+                spec[0] = batch_axes
+            elif l % mesh.shape["data"] == 0:
+                spec[1] = ("data",)
+            return NamedSharding(mesh, P(*lead, *spec))
+        if key == "conv":               # [B, K, DI]
+            b, kk, di = shape
+            spec = [batch_axes if batch_ok else None, None,
+                    "model" if model_ok and di % mesh.shape["model"] == 0 else None]
+            return NamedSharding(mesh, P(*lead, *spec))
+        if key == "ssm":                # [B, DI, DS]
+            b, di, ds = shape
+            spec = [batch_axes if batch_ok else None,
+                    "model" if model_ok and di % mesh.shape["model"] == 0 else None,
+                    None]
+            return NamedSharding(mesh, P(*lead, *spec))
+        if key == "x_prev":             # [B, 1, D]
+            return NamedSharding(
+                mesh, P(*lead, batch_axes if batch_ok else None, None, None)
+            )
+        if key == "wkv":                # [B, NH, HS, HS]
+            b, nh, hs, _ = shape
+            spec = [batch_axes if batch_ok else None,
+                    "model" if model_ok and nh % mesh.shape["model"] == 0 else None,
+                    None, None]
+            return NamedSharding(mesh, P(*lead, *spec))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(walk, cache_sds)
+
+
+def opt_state_specs(opt_name: str, params: PyTree, pspecs: PyTree,
+                    opt_state_sds: PyTree, mesh) -> PyTree:
+    """Optimizer-state shardings derived from the param specs.
+
+    adamw mu/nu mirror the params; adafactor vr drops the last param axis and
+    vc drops the second-to-last; counts are replicated.
+    """
+    flat_p, _ = jax.tree_util.tree_flatten(params)
+    flat_s, _ = jax.tree_util.tree_flatten(pspecs)
+    shape_to_spec = {}
+    for p, s in zip(flat_p, flat_s):
+        shape_to_spec.setdefault(tuple(p.shape), s.spec)
+        if len(p.shape) >= 2:
+            shape_to_spec.setdefault(tuple(p.shape[:-1]), P(*s.spec[:-1]))
+            shape_to_spec.setdefault(
+                tuple(p.shape[:-2] + p.shape[-1:]), P(*s.spec[:-2], s.spec[-1])
+            )
+
+    def one(leaf):
+        spec = shape_to_spec.get(tuple(leaf.shape))
+        if spec is None:
+            spec = P(*([None] * leaf.ndim))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, opt_state_sds)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,230 @@
+"""Sharded step factories: one place that builds the jit-able programs the
+train driver, the serve driver and the dry-run all lower.
+
+Three program kinds per (arch, shape):
+
+  * train_step  — the full DeCaPH round body: per-example clipped grads
+    (microbatched scan), aggregate noise, optimizer update.  The gradient
+    reduce over ("pod","data") IS the secure-aggregation dataflow.
+  * prefill     — forward -> logits (+ the compile-time proof the prefill
+    sharding is coherent).
+  * serve_step  — one-token decode against a seq_len KV cache.
+
+Everything is built from ShapeDtypeStructs; no parameters are materialised.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES
+from repro.configs.shapes import input_specs
+from repro.core import dp as dp_lib
+from repro.launch import sharding as sh
+from repro.models import transformer as tf
+from repro.models.layers import activation_sharding
+from repro.optim import get_optimizer
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ShardedProgram:
+    """A lowered-ready program plus its arg specs (all SDS)."""
+
+    fn: Any                       # callable(*args)
+    args_sds: tuple               # ShapeDtypeStructs with .sharding set
+    kind: str                     # train | prefill | decode
+    cfg: Any
+    meta: dict
+
+
+def _with_shardings(sds_tree: PyTree, spec_tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sp),
+        sds_tree, spec_tree,
+    )
+
+
+def _dp_mode(cfg, dp_override: str | None) -> str:
+    if dp_override is not None:
+        return dp_override
+    return "per_example"  # paper-faithful default
+
+
+def build_train_program(cfg, shape_name: str, mesh,
+                        policy: sh.ShardingPolicy | None = None,
+                        dp_mode: str | None = None) -> ShardedProgram:
+    policy = policy or sh.ShardingPolicy()
+    cfg, batch_sds, kind = input_specs(cfg, shape_name)
+    assert kind == "train"
+    shape = INPUT_SHAPES[shape_name]
+    global_batch = shape["global_batch"]
+    mode = _dp_mode(cfg, dp_mode)
+
+    # cfg.moe_groups aligns token groups with data shards for local routing
+    if cfg.n_experts:
+        cfg = cfg.replace(moe_groups=mesh.shape["data"])
+
+    params_sds = jax.eval_shape(lambda k: tf.init(cfg, k), jax.random.key(0))
+    pspecs = sh.param_specs(params_sds, mesh, policy)
+    opt = get_optimizer(cfg.optimizer, cfg.lr)
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    ospecs = sh.opt_state_specs(cfg.optimizer, params_sds, pspecs, opt_sds, mesh)
+    bspecs = sh.batch_specs(batch_sds, mesh, policy)
+    rng_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    data_size = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            data_size *= mesh.shape[a]
+    # cfg.dp_microbatch is the GLOBAL microbatch per scan step.  When it
+    # covers the data axes the microbatch shards one example per data shard;
+    # below that (the giant models) the batch stays unsharded and the
+    # *sequence* shards over data instead (activation_rules per_example).
+    micro = max(1, min(cfg.dp_microbatch, global_batch))
+    rules = sh.activation_rules(
+        mesh, policy, global_batch=global_batch,
+        per_example=(mode == "per_example" and micro % data_size != 0),
+    )
+
+    constrain = lambda tree: jax.tree_util.tree_map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, pspecs
+    )
+
+    def train_step(params, opt_state, batch, rng):
+        with activation_sharding(rules):
+            if mode == "none":
+                def batched_loss(p):
+                    return tf.loss_fn(cfg, p, batch)
+
+                loss, grads = jax.value_and_grad(batched_loss)(params)
+                grads = constrain(grads)
+            elif mode == "ghost":
+                # Beyond-paper optimized DeCaPH step: exact per-example norms
+                # from ONE batched backward (collector custom-vjp), then one
+                # clip-weighted backward — see core/ghost.py and §Perf.
+                from repro.core.ghost import ghost_clipped_grad_sum
+
+                g_sum, loss, _ = ghost_clipped_grad_sum(
+                    cfg, params, batch, clip_norm=cfg.dp_clip,
+                    chunk_size=min(cfg.ghost_chunk, global_batch),
+                    constrain_grads=constrain,
+                )
+                g_sum = dp_lib.tree_add_noise(
+                    g_sum, jax.random.wrap_key_data(rng),
+                    clip_norm=cfg.dp_clip, noise_multiplier=cfg.dp_sigma,
+                    n_shares=1,
+                )
+                grads = constrain(jax.tree_util.tree_map(
+                    lambda x: x / float(global_batch), g_sum
+                ))
+            else:
+                g_sum, loss = dp_lib.per_example_clipped_grad_sum(
+                    lambda p, ex: tf.per_example_loss_fn(cfg, p, ex),
+                    params, batch,
+                    clip_norm=cfg.dp_clip,
+                    microbatch_size=max(1, micro),
+                    constrain_grads=constrain,
+                )
+                g_sum = dp_lib.tree_add_noise(
+                    g_sum, jax.random.wrap_key_data(rng),
+                    clip_norm=cfg.dp_clip, noise_multiplier=cfg.dp_sigma,
+                    n_shares=1,
+                )
+                grads = jax.tree_util.tree_map(
+                    lambda x: x / float(global_batch), g_sum
+                )
+                grads = constrain(grads)
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            new_params = constrain(new_params)
+            return new_params, new_opt, {"loss": loss}
+
+    args_sds = (
+        _with_shardings(params_sds, pspecs),
+        _with_shardings(opt_sds, ospecs),
+        _with_shardings(batch_sds, bspecs),
+        jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=sh.replicated(mesh)),
+    )
+    meta = {"global_batch": global_batch, "seq_len": shape["seq_len"],
+            "dp_mode": mode, "microbatch": micro}
+    return ShardedProgram(train_step, args_sds, "train", cfg, meta)
+
+
+def build_prefill_program(cfg, shape_name: str, mesh,
+                          policy: sh.ShardingPolicy | None = None
+                          ) -> ShardedProgram:
+    policy = policy or sh.ShardingPolicy()
+    cfg, batch_sds, kind = input_specs(cfg, shape_name)
+    assert kind == "prefill"
+    shape = INPUT_SHAPES[shape_name]
+    if cfg.n_experts:
+        cfg = cfg.replace(moe_groups=mesh.shape["data"])
+    params_sds = jax.eval_shape(lambda k: tf.init(cfg, k), jax.random.key(0))
+    pspecs = sh.param_specs(params_sds, mesh, policy)
+    bspecs = sh.batch_specs(batch_sds, mesh, policy)
+    rules = sh.activation_rules(mesh, policy, global_batch=shape["global_batch"])
+
+    def prefill(params, batch):
+        with activation_sharding(rules):
+            logits, _ = tf.forward(cfg, params, batch)
+            return logits
+
+    args_sds = (
+        _with_shardings(params_sds, pspecs),
+        _with_shardings(batch_sds, bspecs),
+    )
+    meta = {"global_batch": shape["global_batch"], "seq_len": shape["seq_len"]}
+    return ShardedProgram(prefill, args_sds, "prefill", cfg, meta)
+
+
+def build_decode_program(cfg, shape_name: str, mesh,
+                         policy: sh.ShardingPolicy | None = None
+                         ) -> ShardedProgram:
+    policy = policy or sh.ShardingPolicy()
+    cfg, specs, kind = input_specs(cfg, shape_name)
+    assert kind == "decode"
+    shape = INPUT_SHAPES[shape_name]
+    b = shape["global_batch"]
+    if cfg.n_experts:
+        groups = mesh.shape["data"] if b % mesh.shape["data"] == 0 else 1
+        cfg = cfg.replace(moe_groups=groups)
+    params_sds = jax.eval_shape(lambda k: tf.init(cfg, k), jax.random.key(0))
+    pspecs = sh.param_specs(params_sds, mesh, policy)
+    cache_sp = sh.cache_specs(specs["cache"], mesh, policy, global_batch=b)
+    tok_spec = sh.batch_specs({"tokens": specs["tokens"]}, mesh, policy)["tokens"]
+    rules = sh.activation_rules(
+        mesh, policy, global_batch=b,
+        shard_kv_seq=(b % mesh.shape["data"] != 0),
+    )
+
+    def serve_step(params, cache, tokens, index):
+        with activation_sharding(rules):
+            logits, new_cache = tf.decode_step(cfg, params, cache, tokens, index)
+            return logits, new_cache
+
+    args_sds = (
+        _with_shardings(params_sds, pspecs),
+        _with_shardings(specs["cache"], cache_sp),
+        jax.ShapeDtypeStruct(specs["tokens"].shape, specs["tokens"].dtype,
+                             sharding=tok_spec),
+        jax.ShapeDtypeStruct((), jnp.int32, sharding=sh.replicated(mesh)),
+    )
+    meta = {"global_batch": b, "seq_len": shape["seq_len"]}
+    return ShardedProgram(serve_step, args_sds, "decode", cfg, meta)
+
+
+def build_program(cfg, shape_name: str, mesh, policy=None,
+                  dp_mode: str | None = None) -> ShardedProgram:
+    kind = INPUT_SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return build_train_program(cfg, shape_name, mesh, policy, dp_mode)
+    if kind == "prefill":
+        return build_prefill_program(cfg, shape_name, mesh, policy)
+    return build_decode_program(cfg, shape_name, mesh, policy)

@@ -1,0 +1,1 @@
+"""Substrate model zoo: unified transformer stack + paper task models."""

@@ -1,0 +1,347 @@
+"""Attention variants: GQA (full / causal / sliding-window), DeepSeek MLA.
+
+All functions are pure; KV caches are explicit pytrees so ``serve_step`` can
+take them as sharded inputs (``long_500k`` shards the cache *sequence* over
+the ``data`` axis — the partitioner then lowers the softmax reductions into
+the log-sum-exp merge collectives described in DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    apply_mrope,
+    apply_rope,
+    dense_init,
+    pname,
+    rmsnorm,
+    shard,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        pname("wq", "embed", "qheads"): dense_init(ks[0], d, (d, h * hd), dtype),
+        pname("wk", "embed", "kv_heads"): dense_init(ks[1], d, (d, kv * hd), dtype),
+        pname("wv", "embed", "kv_heads"): dense_init(ks[2], d, (d, kv * hd), dtype),
+        pname("wo", "qheads", "embed"): dense_init(ks[3], h * hd, (h * hd, d), dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _sdpa(q, k, v, mask, *, use_flash: bool = False, causal: bool = False,
+          window: int | None = None):
+    """q: [B,S,H,D]; k,v: [B,L,KV,D]; mask: [B,1,S,L] additive or None."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, s, kvh, group, d)
+    scores = jnp.einsum("bskgd,blkd->bkgsl", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if mask is not None:
+        scores = scores + mask[:, :, None]  # mask: [B, KV->1, S, L]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsl,blkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def _sdpa_blocked(q, k, v, *, causal: bool = True, window: int | None = None,
+                  block_k: int = 512):
+    """FlashAttention's algorithm in plain XLA: scan over KV blocks with an
+    online softmax, ``jax.checkpoint``'d so the backward recomputes block
+    probs instead of saving the full [.., S, L] score tensor.  On TPU the
+    Pallas kernel in ``repro.kernels.flash_attention`` takes this role; this
+    path gives the dry-run (and any non-TPU run) the same HBM behaviour.
+    """
+    b, s, h, d = q.shape
+    l, kvh = k.shape[1], k.shape[2]
+    l_orig = l
+    group = h // kvh
+    block_k = min(block_k, l)
+    if l % block_k:
+        pad = block_k - l % block_k
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = k.shape[1]
+    n_blocks = l // block_k
+    qg = (q.reshape(b, s, kvh, group, d).astype(jnp.float32)
+          / math.sqrt(d))
+    kb = k.reshape(b, n_blocks, block_k, kvh, d).swapaxes(0, 1)
+    vb = v.reshape(b, n_blocks, block_k, kvh, d).swapaxes(0, 1)
+    q_pos = jnp.arange(s)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        k_blk, v_blk, idx = xs
+        scores = jnp.einsum("bskgd,blkd->bkgsl", qg,
+                            k_blk.astype(jnp.float32))
+        k_pos = idx * block_k + jnp.arange(block_k)
+        ok = jnp.broadcast_to((k_pos < l_orig)[None, :], (s, block_k))
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            ok &= k_pos[None, :] > q_pos[:, None] - window
+        scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+        m_cur = jnp.max(scores, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_run, m_cur)
+        p = jnp.exp(scores - m_new)
+        p = jnp.where(ok[None, None, None], p, 0.0)
+        alpha = jnp.exp(m_run - m_new)
+        l_new = alpha * l_run + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bkgsl,blkd->bkgsd", p,
+                                       v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, kvh, group, s, 1), NEG_INF, jnp.float32),
+        jnp.zeros((b, kvh, group, s, 1), jnp.float32),
+        jnp.zeros((b, kvh, group, s, d), jnp.float32),
+    )
+    (m_run, l_run, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (kb, vb, jnp.arange(n_blocks))
+    )
+    out = acc / jnp.maximum(l_run, 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d).astype(q.dtype)
+
+
+def _causal_mask(s: int, l: int, offset: int = 0, window: int | None = None):
+    """Additive [1,1,S,L] mask; query i attends keys j <= i+offset, within window."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(l)[None, :]
+    ok = kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    return jnp.where(ok, 0.0, NEG_INF)[None, None]
+
+
+def gqa_apply(params: dict, x: jax.Array, positions: jax.Array, cfg,
+              *, window: int | None = None, causal: bool = True,
+              mrope_positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence (training / prefill) GQA."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(x @ params[pname("wq", "embed", "qheads")], h, hd)
+    k = _split_heads(x @ params[pname("wk", "embed", "kv_heads")], kv, hd)
+    v = _split_heads(x @ params[pname("wv", "embed", "kv_heads")], kv, hd)
+    if cfg.rope_type == "mrope" and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_type != "none":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "attn_batch", None, "heads", None)
+    k = shard(k, "attn_batch", None, None, None)
+    v = shard(v, "attn_batch", None, None, None)
+    if getattr(cfg, "use_flash", False):
+        if jax.default_backend() == "tpu" and causal:
+            from repro.kernels.flash_attention import ops as flash_ops
+
+            out = flash_ops.flash_attention(q, k, v, causal=causal,
+                                            window=window)
+        else:
+            out = _sdpa_blocked(q, k, v, causal=causal, window=window)
+    else:
+        mask = _causal_mask(s, s, 0, window) if causal else None
+        out = _sdpa(q, k, v, mask, causal=causal, window=window)
+    return out.reshape(b, s, h * hd) @ params[pname("wo", "qheads", "embed")]
+
+
+def gqa_init_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def gqa_decode(params: dict, x: jax.Array, cache: dict, index: jax.Array, cfg,
+               *, window: int | None = None) -> tuple[jax.Array, dict]:
+    """One-token decode. x: [B,1,D]; cache k/v: [B,L,KV,hd]; index: scalar."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    l = cache["k"].shape[1]
+    q = _split_heads(x @ params[pname("wq", "embed", "qheads")], h, hd)
+    k_new = _split_heads(x @ params[pname("wk", "embed", "kv_heads")], kv, hd)
+    v_new = _split_heads(x @ params[pname("wv", "embed", "kv_heads")], kv, hd)
+    if cfg.rope_type != "none":
+        pos = jnp.full((b, 1), index, jnp.int32)
+        if cfg.rope_type == "mrope":
+            pos3 = jnp.broadcast_to(pos[..., None], (b, 1, 3))
+            q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+            k_new = apply_mrope(k_new, pos3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, index, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, index, 0, 0))
+    kj = jnp.arange(l)
+    ok = kj <= index
+    if window is not None:
+        ok &= kj > index - window
+    mask = jnp.where(ok, 0.0, NEG_INF)[None, None, None, :]  # [1,1,1,L]
+    if getattr(cfg, "use_decode_kernel", False):
+        from repro.kernels.decode_attention import ops as dec_ops
+
+        out = dec_ops.decode_attention(q, k, v, index, window=window)
+    else:
+        out = _sdpa(q, k, v, mask)
+    y = out.reshape(b, 1, h * hd) @ params[pname("wo", "qheads", "embed")]
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2/V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, dc = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        pname("w_dq", "embed", "dc"): dense_init(ks[0], d, (d, qr), dtype),
+        pname("q_norm_scale", "dc"): jnp.ones((qr,), dtype),
+        pname("w_uq", "dc", "qheads"): dense_init(ks[1], qr, (qr, h * (dn + dr)), dtype),
+        pname("w_dkv", "embed", "dc"): dense_init(ks[2], d, (d, dc), dtype),
+        pname("kv_norm_scale", "dc"): jnp.ones((dc,), dtype),
+        pname("w_uk", "dc", "qheads"): dense_init(ks[3], dc, (dc, h * dn), dtype),
+        pname("w_uv", "dc", "qheads"): dense_init(ks[4], dc, (dc, h * dv), dtype),
+        pname("w_kr", "embed", "rope"): dense_init(ks[5], d, (d, dr), dtype),
+        pname("wo", "qheads", "embed"): dense_init(ks[6], h * dv, (h * dv, d), dtype),
+    }
+
+
+def _mla_q(params, x, positions, cfg):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    ql = x @ params[pname("w_dq", "embed", "dc")]
+    ql = rmsnorm({pname("scale", "embed"): params[pname("q_norm_scale", "dc")]}, ql)
+    q = (ql @ params[pname("w_uq", "dc", "qheads")]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latents(params, x, positions, cfg):
+    c = x @ params[pname("w_dkv", "embed", "dc")]
+    c = rmsnorm({pname("scale", "embed"): params[pname("kv_norm_scale", "dc")]}, c)
+    kr = x @ params[pname("w_kr", "embed", "rope")]  # [B,S,dr] shared across heads
+    kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c, kr
+
+
+def mla_apply(params: dict, x: jax.Array, positions: jax.Array, cfg,
+              *, window: int | None = None) -> jax.Array:
+    """Full-sequence MLA (training/prefill): materialises per-head K/V."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(params, x, positions, cfg)
+    c, kr = _mla_latents(params, x, positions, cfg)
+    k_nope = (c @ params[pname("w_uk", "dc", "qheads")]).reshape(b, s, h, dn)
+    v = (c @ params[pname("w_uv", "dc", "qheads")]).reshape(b, s, h, dv)
+    scale = 1.0 / math.sqrt(dn + dr)
+    scores = (
+        jnp.einsum("bshd,bthd->bhst", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+        + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32), kr.astype(jnp.float32))
+    ) * scale
+    scores = scores + _causal_mask(s, s, 0, window)[:, 0]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32)).astype(x.dtype)
+    return out.reshape(b, s, h * dv) @ params[pname("wo", "qheads", "embed")]
+
+
+def mla_init_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    return {
+        "c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(params: dict, x: jax.Array, cache: dict, index: jax.Array, cfg,
+               *, window: int | None = None) -> tuple[jax.Array, dict]:
+    """Absorbed one-token MLA decode: attends over the compressed latents —
+    per-token cache is kv_lora_rank + qk_rope_dim (576 for V3), the paper's
+    (DeepSeek's) sub-quadratic-memory long-context story."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv, dc = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q_nope, q_rope = _mla_q(params, x, pos, cfg)        # [B,1,H,dn/dr]
+    c_new, kr_new = _mla_latents(params, x, pos, cfg)   # [B,1,dc], [B,1,dr]
+    c = jax.lax.dynamic_update_slice(cache["c"], c_new.astype(cache["c"].dtype), (0, index, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_new.astype(cache["kr"].dtype), (0, index, 0))
+    w_uk = params[pname("w_uk", "dc", "qheads")].reshape(dc, h, dn)
+    w_uv = params[pname("w_uv", "dc", "qheads")].reshape(dc, h, dv)
+    q_abs = jnp.einsum("bshn,dhn->bshd", q_nope, w_uk)  # [B,1,H,dc]
+    scale = 1.0 / math.sqrt(dn + dr)
+    scores = (
+        jnp.einsum("bshd,bld->bhsl", q_abs.astype(jnp.float32), c.astype(jnp.float32))
+        + jnp.einsum("bshr,blr->bhsl", q_rope.astype(jnp.float32), kr.astype(jnp.float32))
+    ) * scale
+    l = c.shape[1]
+    kj = jnp.arange(l)
+    ok = kj <= index
+    if window is not None:
+        ok &= kj > index - window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhsl,bld->bshd", probs, c.astype(jnp.float32))  # [B,1,H,dc]
+    out = jnp.einsum("bshd,dhv->bshv", ctx.astype(x.dtype), w_uv)
+    y = out.reshape(b, 1, h * dv) @ params[pname("wo", "qheads", "embed")]
+    return y, {"c": c, "kr": kr}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_init(key, cfg, dtype) -> dict:
+    return gqa_init(key, cfg, dtype)
+
+
+def cross_apply(params: dict, x: jax.Array, enc: jax.Array, cfg) -> jax.Array:
+    """x: [B,S,D] decoder states; enc: [B,T,D] encoder output (no masking)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(x @ params[pname("wq", "embed", "qheads")], h, hd)
+    k = _split_heads(enc @ params[pname("wk", "embed", "kv_heads")], kv, hd)
+    v = _split_heads(enc @ params[pname("wv", "embed", "kv_heads")], kv, hd)
+    out = _sdpa(q, k, v, None)
+    return out.reshape(b, s, h * hd) @ params[pname("wo", "qheads", "embed")]
+
+
+def cross_kv_cache(params: dict, enc: jax.Array, cfg) -> dict:
+    """Precompute encoder K/V once for decode."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": _split_heads(enc @ params[pname("wk", "embed", "kv_heads")], kv, hd),
+        "v": _split_heads(enc @ params[pname("wv", "embed", "kv_heads")], kv, hd),
+    }
+
+
+def cross_decode(params: dict, x: jax.Array, ckv: dict, cfg) -> jax.Array:
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = _split_heads(x @ params[pname("wq", "embed", "qheads")], h, hd)
+    out = _sdpa(q, ckv["k"], ckv["v"], None)
+    return out.reshape(b, 1, h * hd) @ params[pname("wo", "qheads", "embed")]

@@ -1,0 +1,260 @@
+"""Primitive layers, parameter conventions, and sharding annotations.
+
+Parameter convention
+--------------------
+Every parameter lives in a plain dict pytree whose **key encodes its logical
+axes**: ``"wq|embed,qheads"`` names a weight whose dims are (embed, qheads).
+Sharding specs are derived purely from these names (``logical_axes``), so the
+spec tree can never diverge from the param tree — stacked-layer leading dims
+(from ``vmap``'d inits) are detected by rank and mapped to the ``layers`` axis.
+
+Logical axis vocabulary: embed, mlp, qheads, kv_heads, vocab, experts,
+expert_mlp, dc (MLA latent), rope, state, conv, inner, heads_inner, null.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Param naming / logical axes
+# ---------------------------------------------------------------------------
+
+def pname(name: str, *axes: str) -> str:
+    """Encode logical axes into a parameter key."""
+    return f"{name}|{','.join(axes)}"
+
+
+def logical_axes(key: str, ndim: int) -> tuple[str, ...]:
+    """Decode logical axes from a param key; prepend 'layers' for stacked."""
+    if "|" not in key:
+        axes: tuple[str, ...] = ()
+    else:
+        axes = tuple(a for a in key.split("|")[1].split(",") if a)
+    if len(axes) < ndim:  # vmap-stacked (scan over layers / pattern repeats)
+        axes = ("layers",) * (ndim - len(axes)) + axes
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, dtype, stddev: float):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def dense_init(key, d_in: int, shape, dtype):
+    return trunc_normal(key, shape, dtype, 1.0 / math.sqrt(d_in))
+
+
+# ---------------------------------------------------------------------------
+# Sharding context — annotations become no-ops without an active mesh.
+# ---------------------------------------------------------------------------
+
+_ACTIVE_RULES: dict | None = None
+
+
+class activation_sharding:
+    """Context manager installing logical->mesh rules for activation hints."""
+
+    def __init__(self, rules: dict | None):
+        self.rules = rules
+
+    def __enter__(self):
+        global _ACTIVE_RULES
+        self._prev = _ACTIVE_RULES
+        _ACTIVE_RULES = self.rules
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE_RULES
+        _ACTIVE_RULES = self._prev
+        return False
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Annotate activation ``x`` with logical axes (identity without rules).
+
+    Mesh axes may appear in at most one position: earlier logical axes win
+    (e.g. attn_batch over ("data","model") suppresses heads -> "model"),
+    and dims not divisible by their mesh extent fall back to replication.
+    """
+    rules = _ACTIVE_RULES
+    if rules is None:
+        return x
+    import numpy as _np
+    from jax.sharding import PartitionSpec as P  # local import: cheap
+
+    mesh = rules["__mesh__"]
+    used: set = set()
+    entries = []
+    for dim, a in zip(x.shape, axes):
+        mesh_ax = rules.get(a) if a else None
+        flat = tuple(mesh_ax) if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        size = int(_np.prod([mesh.shape[m] for m in flat if m])) if mesh_ax else 1
+        if mesh_ax is None or any(m in used for m in flat) or dim % size != 0:
+            entries.append(None)
+        else:
+            entries.append(mesh_ax)
+            used.update(flat)
+    spec = P(*entries)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {pname("scale", "embed"): jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = params[pname("scale", "embed")].astype(jnp.float32)
+    return (y * scale).astype(x.dtype)
+
+
+def layernorm_nonparam(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo's non-parametric LayerNorm (no scale/bias)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> dict:
+    return {
+        pname("scale", "embed"): jnp.ones((d,), dtype),
+        pname("bias", "embed"): jnp.zeros((d,), dtype),
+    }
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    y = layernorm_nonparam(x, eps).astype(jnp.float32)
+    y = y * params[pname("scale", "embed")].astype(jnp.float32)
+    y = y + params[pname("bias", "embed")].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def make_norm(kind: str, d: int, dtype):
+    """(init_params, apply) pair for the configured norm."""
+    if kind == "rmsnorm":
+        return rmsnorm_init(d, dtype), rmsnorm
+    if kind == "ln_nonparam":
+        return {}, lambda p, x: layernorm_nonparam(x)
+    if kind == "layernorm":
+        return layernorm_init(d, dtype), layernorm
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Activations / gated FFN variants
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # Nemotron squared-ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def ffn_init(key, d_model: int, d_ff: int, kind: str, dtype) -> dict:
+    """kind: swiglu | geglu | relu2 | gelu (non-gated kinds: up+down only)."""
+    ks = jax.random.split(key, 3)
+    p = {}
+    gated = kind in ("swiglu", "geglu")
+    if gated:
+        p[pname("w_gate", "embed", "mlp")] = dense_init(ks[0], d_model, (d_model, d_ff), dtype)
+    p[pname("w_up", "embed", "mlp")] = dense_init(ks[1], d_model, (d_model, d_ff), dtype)
+    p[pname("w_down", "mlp", "embed")] = dense_init(ks[2], d_ff, (d_ff, d_model), dtype)
+    return p
+
+
+def ffn_apply(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    up = x @ params[pname("w_up", "embed", "mlp")]
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params[pname("w_gate", "embed", "mlp")]) * up
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ params[pname("w_gate", "embed", "mlp")]) * up
+    elif kind in ("relu2", "gelu"):
+        h = act_fn(kind)(up)
+    else:
+        raise ValueError(f"unknown ffn kind {kind!r}")
+    h = shard(h, "batch", None, "mlp")
+    return h @ params[pname("w_down", "mlp", "embed")]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, D/2]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]  # [..., S, 1, D/2]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions_3d: jax.Array, theta: float, sections: tuple[int, int, int]
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: frequency bands split across (t, h, w).
+
+    x: [B, S, H, D]; positions_3d: [B, S, 3] (temporal, height, width ids).
+    ``sections`` gives the number of *frequency pairs* per component,
+    summing to D/2.
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # [D/2]
+    # Select which positional component drives each frequency band.
+    sec_ids = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=d // 2
+    )  # [D/2] in {0,1,2}
+    pos = jnp.take_along_axis(
+        positions_3d.astype(jnp.float32),
+        jnp.broadcast_to(sec_ids[None, None, :], positions_3d.shape[:2] + (d // 2,)).astype(jnp.int32),
+        axis=-1,
+    )  # [B, S, D/2]
+    ang = pos * inv  # [B, S, D/2]
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings [n, d]."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    out = jnp.zeros((n, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts with expert-parallel-friendly capacity dispatch.
+
+Dispatch is sort-based (argsort by expert id + position-in-expert buckets)
+rather than GShard one-hot einsums: the dense [tokens, experts, capacity]
+dispatch tensor is impossible at DeepSeek scale (65k tokens x 256 experts),
+while the sorted scatter is O(tokens·k).  Tokens are processed in ``groups``
+aligned with the data-parallel shards, so the sort never crosses a shard and
+the only cross-shard traffic is the expert all-to-all the partitioner inserts
+when contracting the grouped buffer against ``experts``-sharded weights.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import act_fn, dense_init, pname, shard
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        pname("w_router", "embed", "experts"): dense_init(ks[0], d, (d, e), jnp.float32),
+        pname("w_gate", "experts", "embed", "expert_mlp"): dense_init(ks[1], d, (e, d, f), dtype),
+        pname("w_up", "experts", "embed", "expert_mlp"): dense_init(ks[2], d, (e, d, f), dtype),
+        pname("w_down", "experts", "expert_mlp", "embed"): dense_init(ks[3], f, (e, f, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.expert_d_ff * cfg.n_shared_experts
+        ksh = jax.random.split(ks[4], 3)
+        p[pname("w_shared_gate", "embed", "mlp")] = dense_init(ksh[0], d, (d, fs), dtype)
+        p[pname("w_shared_up", "embed", "mlp")] = dense_init(ksh[1], d, (d, fs), dtype)
+        p[pname("w_shared_down", "mlp", "embed")] = dense_init(ksh[2], fs, (fs, d), dtype)
+    return p
+
+
+def _dispatch_group(x, top_ids, top_probs, n_experts: int, capacity: int):
+    """Sort-based dispatch for one token group.
+
+    x: [T, D]; top_ids/top_probs: [T, K].  Returns (buffer [E, C, D],
+    gather metadata) for combine.
+    """
+    t, k = top_ids.shape
+    flat_ids = top_ids.reshape(-1)                          # [T*K]
+    order = jnp.argsort(flat_ids)                           # stable
+    sorted_ids = flat_ids[order]
+    counts = jnp.bincount(flat_ids, length=n_experts)
+    starts = jnp.cumsum(counts) - counts                    # exclusive cumsum
+    pos = jnp.arange(t * k) - starts[sorted_ids]            # slot within expert
+    keep = pos < capacity
+    pos_c = jnp.where(keep, pos, capacity - 1)
+    tok = order // k                                        # source token
+    buf = jnp.zeros((n_experts, capacity, x.shape[-1]), x.dtype)
+    buf = buf.at[sorted_ids, pos_c].add(
+        x[tok] * keep[:, None].astype(x.dtype)
+    )
+    meta = (sorted_ids, pos_c, tok, keep, order)
+    return buf, meta
+
+
+def _combine_group(h, meta, top_probs, t: int, k: int):
+    """Gather expert outputs back per token, weight by router probs."""
+    sorted_ids, pos_c, tok, keep, order = meta
+    out_sorted = h[sorted_ids, pos_c] * keep[:, None].astype(h.dtype)  # [T*K, D]
+    probs_sorted = top_probs.reshape(-1)[order]
+    weighted = out_sorted * probs_sorted[:, None].astype(h.dtype)
+    out = jnp.zeros((t, h.shape[-1]), h.dtype)
+    return out.at[tok].add(weighted)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (y [B,S,D], aux_loss scalar).
+
+    Router in fp32; load-balance auxiliary loss (Switch-style) returned for
+    the training objective.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    groups = max(1, getattr(cfg, "moe_groups", 1))
+    t_all = b * s
+    assert t_all % groups == 0, "tokens must divide moe_groups"
+    tg = t_all // groups
+    capacity = max(1, int(cfg.capacity_factor * tg * k / e))
+
+    xf = x.reshape(t_all, d)
+    logits = (xf.astype(jnp.float32) @ params[pname("w_router", "embed", "experts")])
+    probs = jax.nn.softmax(logits, axis=-1)                 # [T, E]
+    top_probs, top_ids = jax.lax.top_k(probs, k)            # [T, K]
+    top_probs = top_probs / jnp.sum(top_probs, -1, keepdims=True)
+
+    # Switch-transformer load-balance aux loss.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_ids, e, dtype=jnp.float32), axis=1), axis=0
+    ) / k
+    aux = e * jnp.sum(me * ce)
+
+    xg = xf.reshape(groups, tg, d)
+    idsg = top_ids.reshape(groups, tg, k)
+    probsg = top_probs.reshape(groups, tg, k)
+
+    def group_fn(xg_i, ids_i, probs_i):
+        buf, meta = _dispatch_group(xg_i, ids_i, probs_i, e, capacity)
+        return buf, meta
+
+    bufs, metas = jax.vmap(group_fn)(xg, idsg, probsg)      # [G, E, C, D]
+    bufs = shard(bufs, "batch", "experts", None, None)
+    act = act_fn(cfg.moe_act if hasattr(cfg, "moe_act") else "silu")
+    gate = jnp.einsum("gecd,edf->gecf", bufs, params[pname("w_gate", "experts", "embed", "expert_mlp")])
+    up = jnp.einsum("gecd,edf->gecf", bufs, params[pname("w_up", "experts", "embed", "expert_mlp")])
+    h = act(gate) * up
+    h = shard(h, "batch", "experts", None, None)
+    yexp = jnp.einsum("gecf,efd->gecd", h, params[pname("w_down", "experts", "expert_mlp", "embed")])
+    yexp = shard(yexp, "batch", "experts", None, None)
+
+    def comb_fn(h_i, meta_i, probs_i):
+        return _combine_group(h_i, meta_i, probs_i, tg, k)
+
+    y = jax.vmap(comb_fn)(yexp, metas, probsg).reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        gate_s = jax.nn.silu(x @ params[pname("w_shared_gate", "embed", "mlp")])
+        up_s = x @ params[pname("w_shared_up", "embed", "mlp")]
+        y = y + (gate_s * up_s) @ params[pname("w_shared_down", "mlp", "embed")]
+    return y.astype(x.dtype), aux

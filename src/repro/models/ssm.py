@@ -1,0 +1,345 @@
+"""State-space mixers: Mamba-1 selective scan and RWKV6 ("Finch").
+
+Both use ``jax.lax.associative_scan`` along the sequence for training /
+prefill (log-depth on TPU; the recurrences are linear with diagonal
+transition so the combine is elementwise) and O(1)-state single-step
+recurrences for decode — these are the architectures that make ``long_500k``
+native (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, pname, shard
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (selective SSM)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds, dconv, dt_rank = cfg.mamba_d_state, cfg.mamba_d_conv, cfg.mamba_dt_rank
+    ks = jax.random.split(key, 7)
+    return {
+        pname("w_in", "embed", "inner"): dense_init(ks[0], d, (d, 2 * di), dtype),
+        pname("conv_w", "conv", "inner"): dense_init(ks[1], dconv, (dconv, di), dtype),
+        pname("conv_b", "inner"): jnp.zeros((di,), dtype),
+        pname("w_bcdt", "inner", "state"): dense_init(ks[2], di, (di, 2 * ds + dt_rank), dtype),
+        pname("w_dt", "dc", "inner"): dense_init(ks[3], dt_rank, (dt_rank, di), dtype),
+        pname("dt_bias", "inner"): jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32)
+                             * (math.log(0.1) - math.log(0.001)) + math.log(0.001)),
+                     1e-4, None))).astype(dtype),
+        pname("a_log", "inner", "state"): jnp.log(
+            jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+        ).astype(jnp.float32),
+        pname("d_skip", "inner"): jnp.ones((di,), jnp.float32),
+        pname("w_out", "inner", "embed"): dense_init(ks[5], di, (di, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along S. x: [B,S,DI]; w: [K,DI]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _diag_combine(x, y):
+    """Associative combine for h_t = a_t * h_{t-1} + b_t (diagonal A)."""
+    a1, b1 = x
+    a2, b2 = y
+    return a1 * a2, a2 * b1 + b2
+
+
+def _ssm_scan(u, dt, a, b, c, chunk: int = 256):
+    """Chunked selective scan.  u,dt: [B,S,DI]; a: [DI,DS]; b,c: [B,S,DS].
+
+    h_t = exp(dt_t * A) h_{t-1} + (dt_t * B_t) u_t ;  y_t = C_t . h_t
+    Diagonal transition => associative scan with elementwise combine.  The
+    sequence is processed in chunks (lax.scan carries the boundary state) so
+    the materialised [B, L, DI, DS] working set is bounded by the chunk size
+    instead of the full sequence — the Mamba-2/SSD-style TPU formulation.
+    """
+    s = u.shape[1]
+    chunk = min(chunk, s)
+    if s % chunk != 0:  # pad to a multiple (padded steps have dt=0 => identity)
+        pad = chunk - s % chunk
+        u, dt = (jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in (u, dt))
+        b, c = (jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in (b, c))
+    n_chunks = u.shape[1] // chunk
+
+    def rechunk(t):
+        return t.reshape(t.shape[0], n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    uc, dtc, bc, cc = map(rechunk, (u, dt, b, c))  # [N, B, L, ...]
+
+    def step(h0, args):
+        u_i, dt_i, b_i, c_i = args
+        da = jnp.exp(dt_i[..., None] * a)                       # [B,L,DI,DS]
+        dbu = (dt_i * u_i)[..., None] * b_i[:, :, None, :]      # [B,L,DI,DS]
+        a_cum, h_rel = jax.lax.associative_scan(_diag_combine, (da, dbu), axis=1)
+        h = a_cum * h0[:, None] + h_rel                          # [B,L,DI,DS]
+        y = jnp.einsum("bldn,bln->bld", h, c_i)
+        return h[:, -1], y
+
+    _, ys = jax.lax.scan(step, jnp.zeros((u.shape[0], a.shape[0], a.shape[1]),
+                                         u.dtype), (uc, dtc, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(u.shape[0], -1, a.shape[0])
+    return y[:, :s]
+
+
+def mamba_apply(params: dict, x: jax.Array, cfg) -> jax.Array:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds, dt_rank = cfg.mamba_d_state, cfg.mamba_dt_rank
+    xz = x @ params[pname("w_in", "embed", "inner")]
+    xi, z = xz[..., :di], xz[..., di:]
+    xi = shard(xi, "batch", None, "mlp")
+    xi = _causal_conv(xi, params[pname("conv_w", "conv", "inner")],
+                      params[pname("conv_b", "inner")])
+    xi = jax.nn.silu(xi)
+    bcdt = xi @ params[pname("w_bcdt", "inner", "state")]
+    b, c = bcdt[..., :ds], bcdt[..., ds : 2 * ds]
+    dt = jax.nn.softplus(
+        bcdt[..., 2 * ds :] @ params[pname("w_dt", "dc", "inner")]
+        + params[pname("dt_bias", "inner")]
+    )
+    a = -jnp.exp(params[pname("a_log", "inner", "state")])
+    y = _ssm_scan(xi.astype(jnp.float32), dt.astype(jnp.float32), a,
+                  b.astype(jnp.float32), c.astype(jnp.float32))
+    y = y + xi.astype(jnp.float32) * params[pname("d_skip", "inner")]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return y @ params[pname("w_out", "inner", "embed")]
+
+
+def mamba_init_cache(cfg, batch: int, dtype) -> dict:
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def mamba_decode(params: dict, x: jax.Array, cache: dict, cfg
+                 ) -> tuple[jax.Array, dict]:
+    """One-step recurrence. x: [B,1,D]."""
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    xz = x @ params[pname("w_in", "embed", "inner")]
+    xi, z = xz[..., :di], xz[..., di:]
+    conv_w = params[pname("conv_w", "conv", "inner")]
+    hist = jnp.concatenate([cache["conv"], xi], axis=1)     # [B,K,DI]
+    conv_out = jnp.einsum("bkd,kd->bd", hist, conv_w)[:, None] + params[pname("conv_b", "inner")]
+    xi_c = jax.nn.silu(conv_out)
+    bcdt = xi_c @ params[pname("w_bcdt", "inner", "state")]
+    bssm, cssm = bcdt[..., :ds], bcdt[..., ds : 2 * ds]
+    dt = jax.nn.softplus(
+        bcdt[..., 2 * ds :] @ params[pname("w_dt", "dc", "inner")]
+        + params[pname("dt_bias", "inner")]
+    )
+    a = -jnp.exp(params[pname("a_log", "inner", "state")])
+    da = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * a)          # [B,DI,DS]
+    dbu = (dt * xi_c)[:, 0, :, None].astype(jnp.float32) * bssm[:, 0, None, :].astype(jnp.float32)
+    h = da * cache["ssm"] + dbu                              # [B,DI,DS]
+    y = jnp.einsum("bdn,bn->bd", h, cssm[:, 0].astype(jnp.float32))[:, None]
+    y = y + xi_c.astype(jnp.float32) * params[pname("d_skip", "inner")]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params[pname("w_out", "inner", "embed")]
+    return out, {"conv": hist[:, 1:], "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    lora = cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 9)
+    return {
+        pname("w_r", "embed", "qheads"): dense_init(ks[0], d, (d, d), dtype),
+        pname("w_k", "embed", "kv_heads"): dense_init(ks[1], d, (d, d), dtype),
+        pname("w_v", "embed", "kv_heads"): dense_init(ks[2], d, (d, d), dtype),
+        pname("w_g", "embed", "mlp"): dense_init(ks[3], d, (d, d), dtype),
+        pname("w_o", "qheads", "embed"): dense_init(ks[4], d, (d, d), dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x W_a) W_b))
+        pname("decay_w0", "embed"): jnp.full((d,), -6.0, jnp.float32)
+        + jax.random.uniform(ks[5], (d,), jnp.float32),
+        pname("decay_wa", "embed", "dc"): dense_init(ks[6], d, (d, lora), dtype),
+        pname("decay_wb", "dc", "embed"): dense_init(ks[7], lora, (lora, d), dtype),
+        pname("bonus_u", "qheads"): jnp.zeros((nh, hs), jnp.float32),
+        pname("token_mix", "embed"): 0.5 * jnp.ones((5, d), jnp.float32),
+    }
+
+
+def _rwkv_wkv_scan_quadratic(r, k, v, w, u, chunk: int = 32):
+    """GLA-style chunked linear attention (the §Perf-optimized RWKV6 path).
+
+    Within a chunk the recurrence is evaluated with two [L, L] matmuls using
+    decay-factorised queries/keys (r~ = r * exp(cum_excl), k~ = k *
+    exp(-cum)); full [L, NH, HS, HS] states are materialised ONLY at chunk
+    boundaries — a ~L-fold cut of the dominant HBM term in the train_4k
+    roofline (EXPERIMENTS.md §Perf).  Numerically safe while per-chunk decay
+    products stay in fp32 range (RWKV decays ~1; chunk=32 by default).
+    """
+    s = r.shape[1]
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    n_chunks = r.shape[1] // chunk
+    b_dim, _, nh, hs = r.shape
+
+    def rechunk(t):
+        return t.reshape(b_dim, n_chunks, chunk, nh, hs).swapaxes(0, 1)
+
+    rc, kc, vc, wc = map(rechunk, (r, k, v, w))  # [N,B,L,NH,HS]
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)  # strict
+
+    def step(s0, args):
+        r_i, k_i, v_i, w_i = args                       # [B,L,NH,HS]
+        lw = jnp.log(jnp.maximum(w_i, 1e-30))
+        ca = jnp.cumsum(lw, axis=1)                      # inclusive
+        cae = ca - lw                                    # exclusive
+        r_dec = r_i * jnp.exp(cae)                       # r~
+        k_dec = k_i * jnp.exp(-ca)                       # k~
+        # inter-chunk: r~_t . S0
+        y_inter = jnp.einsum("blnk,bnkv->blnv", r_dec, s0)
+        # intra-chunk: strictly-causal decayed scores
+        scores = jnp.einsum("blnk,bmnk->bnlm", r_dec, k_dec) * mask[None, None]
+        y_intra = jnp.einsum("bnlm,bmnv->blnv", scores, v_i)
+        # bonus (current token): y += (r . (u * k)) v
+        bonus_coef = jnp.sum(r_i * u[None, None] * k_i, axis=-1)  # [B,L,NH]
+        y_bonus = bonus_coef[..., None] * v_i
+        y = y_inter + y_intra + y_bonus
+        # boundary state update
+        k_tail = k_i * jnp.exp(ca[:, -1:, :, :] - ca)    # k * prod_{>tau} w
+        s1 = jnp.exp(ca[:, -1])[..., None] * s0 + jnp.einsum(
+            "blnk,blnv->bnkv", k_tail, v_i
+        )
+        return s1, y
+
+    s_final, ys = jax.lax.scan(
+        step, jnp.zeros((b_dim, nh, hs, hs), r.dtype), (rc, kc, vc, wc)
+    )
+    y = ys.swapaxes(0, 1).reshape(b_dim, -1, nh, hs)
+    return y[:, :s], s_final
+
+
+def _rwkv_wkv_scan(r, k, v, w, u, chunk: int = 32):
+    """r,k,v: [B,S,NH,HS]; w (decay in (0,1)): [B,S,NH,HS]; u: [NH,HS].
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    Chunked associative scan (boundary state carried by lax.scan) so the
+    [B, L, NH, HS, HS] outer-product working set is bounded by the chunk —
+    and the exclusive-prefix state is recovered by an in-chunk shift rather
+    than dividing by (possibly tiny) decays: numerically safe on TPU bf16.
+    """
+    s = r.shape[1]
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    n_chunks = r.shape[1] // chunk
+    b_dim, _, nh, hs = r.shape
+
+    def rechunk(t):
+        return t.reshape(b_dim, n_chunks, chunk, nh, hs).swapaxes(0, 1)
+
+    rc, kc, vc, wc = map(rechunk, (r, k, v, w))  # [N,B,L,NH,HS]
+
+    def step(s0, args):
+        r_i, k_i, v_i, w_i = args
+        kv = jnp.einsum("blnk,blnv->blnkv", k_i, v_i)        # [B,L,NH,HS,HS]
+        a = jnp.broadcast_to(w_i[..., None], kv.shape)
+        a_cum, s_rel = jax.lax.associative_scan(_diag_combine, (a, kv), axis=1)
+        s_all = a_cum * s0[:, None] + s_rel                   # S_t within chunk
+        # Exclusive prefix: S_{t-1}; first position sees the carried state.
+        s_prev = jnp.concatenate([s0[:, None], s_all[:, :-1]], axis=1)
+        y = jnp.einsum(
+            "blnk,blnkv->blnv", r_i, s_prev + u[None, None, :, :, None] * kv
+        )
+        return s_all[:, -1], y
+
+    s_final, ys = jax.lax.scan(
+        step, jnp.zeros((b_dim, nh, hs, hs), r.dtype), (rc, kc, vc, wc)
+    )
+    y = ys.swapaxes(0, 1).reshape(b_dim, -1, nh, hs)
+    return y[:, :s], s_final
+
+
+def _rwkv_proj(params, x, x_prev, cfg):
+    """Token-shift mixed projections. x: [B,S,D]; x_prev: [B,S,D] (shifted)."""
+    mix = params[pname("token_mix", "embed")].astype(x.dtype)
+    xs = [x * mix[i] + x_prev * (1.0 - mix[i]) for i in range(5)]
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    r = (xs[0] @ params[pname("w_r", "embed", "qheads")]).reshape(*x.shape[:-1], nh, hs)
+    k = (xs[1] @ params[pname("w_k", "embed", "kv_heads")]).reshape(*x.shape[:-1], nh, hs)
+    v = (xs[2] @ params[pname("w_v", "embed", "kv_heads")]).reshape(*x.shape[:-1], nh, hs)
+    g = jax.nn.silu(xs[3] @ params[pname("w_g", "embed", "mlp")])
+    dec = params[pname("decay_w0", "embed")] + jnp.tanh(
+        xs[4] @ params[pname("decay_wa", "embed", "dc")]
+    ) @ params[pname("decay_wb", "dc", "embed")]
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(*x.shape[:-1], nh, hs)
+    return r, k, v, g, w
+
+
+def rwkv6_apply(params: dict, x: jax.Array, cfg) -> jax.Array:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _rwkv_proj(params, x, x_prev, cfg)
+    u = params[pname("bonus_u", "qheads")]
+    scan_fn = (_rwkv_wkv_scan_quadratic
+               if getattr(cfg, "rwkv_chunk_impl", "states") == "quadratic"
+               else _rwkv_wkv_scan)
+    y, _ = scan_fn(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w, u, chunk=getattr(cfg, "rwkv_chunk", 32),
+    )
+    y = y.reshape(*x.shape[:-1], d).astype(x.dtype) * g.astype(x.dtype)
+    return (y @ params[pname("w_o", "qheads", "embed")]).astype(x.dtype)
+
+
+def rwkv6_init_cache(cfg, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    return {
+        "x_prev": jnp.zeros((batch, 1, d), dtype),
+        "wkv": jnp.zeros((batch, nh, hs, hs), jnp.float32),
+    }
+
+
+def rwkv6_decode(params: dict, x: jax.Array, cache: dict, cfg
+                 ) -> tuple[jax.Array, dict]:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    r, k, v, g, w = _rwkv_proj(params, x, cache["x_prev"], cfg)
+    u = params[pname("bonus_u", "qheads")]
+    r1, k1, v1, w1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+    kv = jnp.einsum("bnk,bnv->bnkv", k1, v1)
+    y = jnp.einsum("bnk,bnkv->bnv", r1, cache["wkv"] + u[None, :, :, None] * kv)
+    s_new = w1[..., None] * cache["wkv"] + kv
+    y = y.reshape(x.shape[0], 1, d).astype(x.dtype) * g.astype(x.dtype)
+    out = (y @ params[pname("w_o", "qheads", "embed")]).astype(x.dtype)
+    return out, {"x_prev": x, "wkv": s_new.astype(cache["wkv"].dtype)}

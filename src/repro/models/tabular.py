@@ -1,0 +1,231 @@
+"""The paper's case-study models: MLP, logistic regression, SVC, mini-DenseNet.
+
+These are the architectures DeCaPH's experiments actually train (GEMINI MLP
+436-300-100-50-10-1, pancreas MLP 15558-1000-100-4, DenseNet121 on X-rays).
+They are expressed as ``repro.core.federation.Model`` triples and also expose
+a **ghost-clipping** fast path (dense stacks -> per-example norms without
+per-example grads; `repro.kernels.ghost_norm` covers the sequence case).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.federation import Model
+
+
+def _dense_init(key, d_in, d_out):
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (d_in, d_out), jnp.float32) * math.sqrt(2.0 / d_in)
+    return {"w": w, "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def mlp_init(key, sizes: Sequence[int]):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return {f"l{i}": _dense_init(ks[i], sizes[i], sizes[i + 1])
+            for i in range(len(sizes) - 1)}
+
+
+def mlp_forward(params, x, n_layers: int):
+    h = x
+    for i in range(n_layers):
+        h = h @ params[f"l{i}"]["w"] + params[f"l{i}"]["b"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def _bce_with_logits(logit, y):
+    return jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+
+
+def make_mlp_classifier(sizes: Sequence[int], task: str = "binary") -> Model:
+    """task: binary (GEMINI, 1 output) | multiclass (pancreas, C outputs)."""
+    n_layers = len(sizes) - 1
+
+    def init_fn(key):
+        return mlp_init(key, sizes)
+
+    def loss_fn(params, ex):
+        logit = mlp_forward(params, ex["x"], n_layers)
+        if task == "binary":
+            return jnp.mean(_bce_with_logits(logit[..., 0], ex["y"]))
+        logp = jax.nn.log_softmax(logit, axis=-1)
+        onehot = jax.nn.one_hot(ex["y"].astype(jnp.int32), sizes[-1])
+        return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+    def predict_fn(params, x):
+        logit = mlp_forward(params, x, n_layers)
+        if task == "binary":
+            return jax.nn.sigmoid(logit[..., 0])
+        return jax.nn.softmax(logit, axis=-1)
+
+    return Model(init_fn, loss_fn, predict_fn)
+
+
+def make_logistic(d_in: int) -> Model:
+    return make_mlp_classifier([d_in, 1], task="binary")
+
+
+def make_svc(d_in: int, n_classes: int) -> Model:
+    """One-layer SVC via multi-margin loss (paper: MLP + MultiMarginLoss)."""
+
+    def init_fn(key):
+        return mlp_init(key, [d_in, n_classes])
+
+    def loss_fn(params, ex):
+        scores = mlp_forward(params, ex["x"], 1)
+        y = ex["y"].astype(jnp.int32)
+        gold = jnp.take_along_axis(scores, y[..., None], axis=-1)[..., 0]
+        margins = jnp.maximum(0.0, 1.0 + scores - gold[..., None])
+        # subtract the gold term (margin vs itself is exactly 1.0)
+        return jnp.mean(jnp.sum(margins, axis=-1) - 1.0)
+
+    def predict_fn(params, x):
+        return mlp_forward(params, x, 1)
+
+    return Model(init_fn, loss_fn, predict_fn)
+
+
+# ---------------------------------------------------------------------------
+# Mini-DenseNet (chest-radiology stand-in for DenseNet121; BN-free as the
+# paper requires for DP-SGD — norm layers are replaced by fixed scaling).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DenseNetConfig:
+    growth: int = 12
+    blocks: tuple[int, ...] = (2, 2, 2)
+    init_channels: int = 16
+    n_outputs: int = 4          # Atelectasis, Effusion, Cardiomegaly, NoFinding
+    image_size: int = 32
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def densenet_init(key, cfg: DenseNetConfig):
+    params = {}
+    k = jax.random.fold_in(key, 0)
+    params["stem"] = _conv_init(k, 3, 3, 1, cfg.init_channels)
+    ch = cfg.init_channels
+    idx = 1
+    for bi, n in enumerate(cfg.blocks):
+        for li in range(n):
+            params[f"b{bi}_l{li}"] = _conv_init(
+                jax.random.fold_in(key, idx), 3, 3, ch, cfg.growth
+            )
+            ch += cfg.growth
+            idx += 1
+        if bi < len(cfg.blocks) - 1:  # transition 1x1 conv, halve channels
+            params[f"t{bi}"] = _conv_init(
+                jax.random.fold_in(key, idx), 1, 1, ch, ch // 2
+            )
+            ch = ch // 2
+            idx += 1
+    params["head"] = _dense_init(jax.random.fold_in(key, idx), ch, cfg.n_outputs)
+    return params
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def densenet_forward(params, x, cfg: DenseNetConfig):
+    """x: [B, H, W, 1] -> logits [B, n_outputs]."""
+    h = jax.nn.relu(_conv(x, params["stem"]))
+    for bi, n in enumerate(cfg.blocks):
+        for li in range(n):
+            new = jax.nn.relu(_conv(h, params[f"b{bi}_l{li}"]))
+            h = jnp.concatenate([h, new], axis=-1)
+        if bi < len(cfg.blocks) - 1:
+            h = _conv(h, params[f"t{bi}"])
+            h = jax.lax.reduce_window(
+                h, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            ) / 4.0
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def make_densenet(cfg: DenseNetConfig = DenseNetConfig()) -> Model:
+    def init_fn(key):
+        return densenet_init(key, cfg)
+
+    def loss_fn(params, ex):
+        logits = densenet_forward(params, ex["x"][None] if ex["x"].ndim == 3 else ex["x"], cfg)
+        y = ex["y"][None] if ex["y"].ndim == 1 else ex["y"]
+        return jnp.mean(_bce_with_logits(logits, y))
+
+    def predict_fn(params, x):
+        return jax.nn.sigmoid(densenet_forward(params, x, cfg))
+
+    return Model(init_fn, loss_fn, predict_fn)
+
+
+# ---------------------------------------------------------------------------
+# Ghost-clipped DP-SGD for MLP stacks (exact, no per-example grads).
+# ---------------------------------------------------------------------------
+
+def ghost_clipped_grad_sum_mlp(params, batch, sizes, task, clip_norm):
+    """Exact sum of per-example-clipped grads via ghost norms.
+
+    Two cheap passes: (1) forward capturing activations + manual backward for
+    per-layer cotangents -> per-example norm^2 = sum_l |a_l|^2|g_l|^2 + |g_l|^2
+    (weights + biases); (2) the clipped-weighted gradient is  a_l^T diag(c) g_l
+    — one matmul per layer.  Matches vmap(grad)+clip to float tolerance
+    (tests/test_ghost.py).
+    """
+    n_layers = len(sizes) - 1
+    x, y = batch["x"], batch["y"]
+
+    # pass 1: forward with caches
+    acts = [x]
+    pre = []
+    h = x
+    for i in range(n_layers):
+        z = h @ params[f"l{i}"]["w"] + params[f"l{i}"]["b"]
+        pre.append(z)
+        h = jax.nn.relu(z) if i < n_layers - 1 else z
+        acts.append(h)
+
+    logits = acts[-1]
+    # d loss_i / d logits  (per-example mean-free: loss_i is one example's loss)
+    if task == "binary":
+        g = (jax.nn.sigmoid(logits[..., 0]) - y)[..., None]
+    else:
+        onehot = jax.nn.one_hot(y.astype(jnp.int32), sizes[-1])
+        g = jax.nn.softmax(logits, axis=-1) - onehot
+
+    # manual backward collecting per-layer cotangents
+    cots = [None] * n_layers
+    cots[n_layers - 1] = g
+    for i in range(n_layers - 2, -1, -1):
+        g = (g @ params[f"l{i+1}"]["w"].T) * (pre[i] > 0)
+        cots[i] = g
+
+    norm_sq = jnp.zeros(x.shape[0], jnp.float32)
+    for i in range(n_layers):
+        a, g = acts[i], cots[i]
+        norm_sq += jnp.sum(a**2, -1) * jnp.sum(g**2, -1)  # weight (ghost)
+        norm_sq += jnp.sum(g**2, -1)                       # bias
+
+    norms = jnp.sqrt(jnp.maximum(norm_sq, 1e-24))
+    c = jnp.minimum(1.0, clip_norm / norms)               # [B]
+
+    grads = {}
+    for i in range(n_layers):
+        a, g = acts[i], cots[i]
+        gw = jnp.einsum("bi,b,bo->io", a, c, g)
+        gb = jnp.einsum("b,bo->o", c, g)
+        grads[f"l{i}"] = {"w": gw, "b": gb}
+    return grads, norms

@@ -1,0 +1,463 @@
+"""Unified transformer stack: every assigned architecture is an instance.
+
+Functional API (all pure, jit/pjit-friendly):
+
+  init(cfg, key)                          -> params
+  forward(cfg, params, batch)             -> (logits, aux_loss)
+  loss_fn(cfg, params, batch)             -> scalar (batched mean CE)
+  per_example_loss_fn(cfg, params, ex)    -> scalar (one example, for DP)
+  init_cache(cfg, batch, max_len)         -> cache pytree
+  cache_spec(cfg, batch, max_len)         -> ShapeDtypeStruct pytree (dry-run)
+  decode_step(cfg, params, cache, tokens, index) -> (logits, cache)
+
+Layer stacking uses ``lax.scan`` over vmap-stacked per-pattern parameter
+pytrees (one group per (repeat, pattern) entry in cfg.stack) — compile time
+and HLO size stay bounded at 96 layers, and the roofline analyzer multiplies
+one-layer costs by trip counts (launch/roofline.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    ffn_apply,
+    ffn_init,
+    make_norm,
+    pname,
+    rmsnorm,
+    shard,
+    sinusoidal_positions,
+    trunc_normal,
+)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg):
+    from repro.models.layers import layernorm_init
+
+    if cfg.norm == "rmsnorm":
+        return {pname("scale", "embed"): jnp.ones((cfg.d_model,), cfg.pdtype)}
+    if cfg.norm == "layernorm":
+        return layernorm_init(cfg.d_model, cfg.pdtype)
+    return {}  # ln_nonparam
+
+
+def _apply_norm(cfg, p, x):
+    from repro.models.layers import layernorm, layernorm_nonparam
+
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(p, x)
+    if cfg.norm == "layernorm":
+        return layernorm(p, x)
+    return layernorm_nonparam(x)
+
+
+def _mixer_init(key, spec, cfg):
+    if spec.mixer == "attn":
+        return attn.gqa_init(key, cfg, cfg.pdtype)
+    if spec.mixer == "mla":
+        return attn.mla_init(key, cfg, cfg.pdtype)
+    if spec.mixer == "mamba":
+        return ssm_lib.mamba_init(key, cfg, cfg.pdtype)
+    if spec.mixer == "rwkv6":
+        return ssm_lib.rwkv6_init(key, cfg, cfg.pdtype)
+    raise ValueError(f"unknown mixer {spec.mixer!r}")
+
+
+def _layer_init(key, spec, cfg) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {
+        "norm1": _norm_init(cfg),
+        "mixer": _mixer_init(ks[0], spec, cfg),
+        "norm2": _norm_init(cfg),
+    }
+    if spec.ffn == "moe":
+        p["ffn"] = moe_lib.moe_init(ks[1], cfg, cfg.pdtype)
+    else:
+        p["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_kind, cfg.pdtype)
+    if spec.cross_attn:
+        p["cross"] = attn.cross_init(ks[2], cfg, cfg.pdtype)
+        p["norm_cross"] = _norm_init(cfg)
+    return p
+
+
+def _group_init(key, repeat: int, pattern, cfg) -> dict:
+    """Stacked params: leaves get a leading (repeat,) 'layers' dim."""
+    def one(k):
+        ks = jax.random.split(k, len(pattern))
+        return {f"e{j}": _layer_init(ks[j], spec, cfg)
+                for j, spec in enumerate(pattern)}
+
+    if repeat == 1:
+        p = one(key)
+        return jax.tree_util.tree_map(lambda x: x[None], p)
+    return jax.vmap(one)(jax.random.split(key, repeat))
+
+
+def init(cfg, key) -> PyTree:
+    cfg.validate()
+    ks = jax.random.split(key, 8 + len(cfg.stack))
+    params: dict = {
+        pname("embed", "vocab", "embed"): trunc_normal(
+            ks[0], (cfg.vocab_size, cfg.d_model), cfg.pdtype, 0.02
+        ),
+        "final_norm": _norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params[pname("head", "embed", "vocab")] = trunc_normal(
+            ks[1], (cfg.d_model, cfg.vocab_size), cfg.pdtype, 0.02
+        )
+    for gi, (repeat, pattern) in enumerate(cfg.stack):
+        params[f"group{gi}"] = _group_init(ks[2 + gi], repeat, pattern, cfg)
+    if cfg.mtp_depth:
+        from repro.models.layers import dense_init
+
+        spec = cfg.stack[-1][1][0]  # MTP block mirrors the main stack family
+        params["mtp"] = {
+            "proj": {pname("w", "embed", "embed"): dense_init(
+                jax.random.fold_in(ks[1], 7), 2 * cfg.d_model,
+                (2 * cfg.d_model, cfg.d_model), cfg.pdtype)},
+            "norm_h": _norm_init(cfg),
+            "norm_e": _norm_init(cfg),
+            "block": jax.tree_util.tree_map(
+                lambda x: x[None],
+                _layer_init(jax.random.fold_in(ks[1], 8), spec, cfg),
+            ),
+        }
+    if cfg.is_encoder_decoder:
+        from repro.configs.base import LayerSpec
+
+        enc_pattern = (LayerSpec("attn", "dense"),)
+        params["encoder"] = _group_init(
+            ks[-1], cfg.encoder_layers, enc_pattern, cfg
+        )
+        params["enc_final_norm"] = _norm_init(cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_apply(cfg, spec, p, x, positions, mrope_positions, enc_out,
+                 window) -> tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    h = _apply_norm(cfg, p["norm1"], x)
+    if spec.mixer == "attn":
+        h = attn.gqa_apply(p["mixer"], h, positions, cfg, window=window,
+                           causal=True, mrope_positions=mrope_positions)
+    elif spec.mixer == "mla":
+        h = attn.mla_apply(p["mixer"], h, positions, cfg, window=window)
+    elif spec.mixer == "mamba":
+        h = ssm_lib.mamba_apply(p["mixer"], h, cfg)
+    elif spec.mixer == "rwkv6":
+        h = ssm_lib.rwkv6_apply(p["mixer"], h, cfg)
+    x = x + h
+    if spec.cross_attn and enc_out is not None:
+        h = _apply_norm(cfg, p["norm_cross"], x)
+        h = attn.cross_apply(p["cross"], h, enc_out, cfg)
+        x = x + h
+    h = _apply_norm(cfg, p["norm2"], x)
+    if spec.ffn == "moe":
+        h, aux = moe_lib.moe_apply(p["ffn"], h, cfg)
+    else:
+        h = ffn_apply(p["ffn"], h, cfg.ffn_kind)
+    x = x + h
+    x = shard(x, "batch", "seq", None)
+    return x, aux
+
+
+def _run_group(cfg, pattern, stacked, x, positions, mrope_positions, enc_out,
+               window) -> tuple[jax.Array, jax.Array]:
+    def body(carry, layer_p):
+        x, aux = carry
+
+        def inner(x, aux):
+            for j, spec in enumerate(pattern):
+                x, a = _layer_apply(cfg, spec, layer_p[f"e{j}"], x, positions,
+                                    mrope_positions, enc_out, window)
+                aux = aux + a
+            return x, aux
+
+        if cfg.remat:
+            x, aux = jax.checkpoint(inner)(x, aux)
+        else:
+            x, aux = inner(x, aux)
+        return (x, aux), None
+
+    repeat = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    if cfg.scan_layers and repeat > 1:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for r in range(repeat):
+            layer_p = jax.tree_util.tree_map(lambda t: t[r], stacked)
+            (x, aux), _ = body((x, aux), layer_p)
+    return x, aux
+
+
+def _encode(cfg, params, frames) -> jax.Array:
+    """Whisper encoder over (stub) conv-frontend frame embeddings."""
+    t = frames.shape[1]
+    x = frames.astype(cfg.cdtype) + sinusoidal_positions(t, cfg.d_model).astype(cfg.cdtype)
+    from repro.configs.base import LayerSpec
+
+    pattern = (LayerSpec("attn", "dense"),)
+    positions = jnp.broadcast_to(jnp.arange(t)[None], frames.shape[:2])
+
+    def body(carry, layer_p):
+        x, _ = carry
+        h = _apply_norm(cfg, layer_p["e0"]["norm1"], x)
+        h = attn.gqa_apply(layer_p["e0"]["mixer"], h, positions, cfg,
+                           causal=False)
+        x = x + h
+        h = _apply_norm(cfg, layer_p["e0"]["norm2"], x)
+        x = x + ffn_apply(layer_p["e0"]["ffn"], h, cfg.ffn_kind)
+        return (x, jnp.zeros((), jnp.float32)), None
+
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                             params["encoder"])
+    return _apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def _embed_inputs(cfg, params, batch) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+    """Token (+ modality-stub) embedding. Returns (x, positions, mrope_pos)."""
+    emb = params[pname("embed", "vocab", "embed")]
+    tokens = batch["tokens"]
+    x = emb[tokens].astype(cfg.cdtype)
+    if cfg.arch_type == "vlm" and "vision_embeds" in batch:
+        # Vision tower stub: precomputed patch embeddings prefix the text.
+        ve = batch["vision_embeds"].astype(cfg.cdtype)
+        x = jnp.concatenate([ve, x], axis=1)
+    b, s, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    mrope_positions = batch.get("mrope_positions")
+    if cfg.rope_type == "mrope" and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    return x, positions, mrope_positions
+
+
+def forward(cfg, params, batch) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits [B,S,V], aux_loss)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(cfg, params, batch["frames"])
+    x, positions, mrope_positions = _embed_inputs(cfg, params, batch)
+    x = shard(x, "batch", "seq", None)
+    window = cfg.sliding_window
+    aux_total = jnp.zeros((), jnp.float32)
+    for gi, (repeat, pattern) in enumerate(cfg.stack):
+        x, aux = _run_group(cfg, pattern, params[f"group{gi}"], x, positions,
+                            mrope_positions, enc_out, window)
+        aux_total = aux_total + aux
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params[pname("embed", "vocab", "embed")].T.astype(cfg.cdtype)
+    else:
+        logits = x @ params[pname("head", "embed", "vocab")].astype(cfg.cdtype)
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux_total
+
+
+def _ce(logits, labels) -> jax.Array:
+    """Token-mean cross entropy; labels < 0 are masked."""
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels_c[..., None], axis=-1
+    )[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg, params, batch) -> jax.Array:
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    if cfg.arch_type == "vlm" and "vision_embeds" in batch:
+        # loss only over the text segment (labels align to text tokens)
+        logits = logits[:, -labels.shape[1]:]
+    loss = _ce(logits, labels) + cfg.router_aux_coef * aux
+    if cfg.mtp_depth:
+        loss = loss + cfg.mtp_loss_weight * _mtp_loss(cfg, params, batch)
+    return loss
+
+
+def _mtp_loss(cfg, params, batch) -> jax.Array:
+    """DeepSeek-V3 multi-token prediction: an extra block predicts t+2 from
+    [h_t ; emb(tok_{t+1})] with shared embeddings/head (depth-1 MTP)."""
+    # re-run the backbone for hidden states (cheap relative to the stack at
+    # smoke scale; production would thread hidden out of forward())
+    hidden = _backbone_hidden(cfg, params, batch)
+    emb = params[pname("embed", "vocab", "embed")]
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    nxt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+    e_next = emb[nxt].astype(cfg.cdtype)
+    mtp = params["mtp"]
+    h = jnp.concatenate(
+        [_apply_norm(cfg, mtp["norm_h"], hidden),
+         _apply_norm(cfg, mtp["norm_e"], e_next)], axis=-1
+    ) @ mtp["proj"][pname("w", "embed", "embed")]
+    spec = cfg.stack[-1][1][0]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    block_p = jax.tree_util.tree_map(lambda t: t[0], mtp["block"])
+    h, _ = _layer_apply(cfg, spec, block_p, h, positions, None, None,
+                        cfg.sliding_window)
+    h = _apply_norm(cfg, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits2 = h @ emb.T.astype(cfg.cdtype)
+    else:
+        logits2 = h @ params[pname("head", "embed", "vocab")].astype(cfg.cdtype)
+    labels = batch["labels"]
+    # position t predicts labels_{t+1} (i.e. token t+2); mask the tail
+    labels2 = jnp.concatenate(
+        [labels[:, 1:], jnp.full_like(labels[:, -1:], -1)], axis=1
+    )
+    return _ce(logits2, labels2)
+
+
+def _backbone_hidden(cfg, params, batch) -> jax.Array:
+    """Hidden states before the LM head (used by the MTP module)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(cfg, params, batch["frames"])
+    x, positions, mrope_positions = _embed_inputs(cfg, params, batch)
+    for gi, (repeat, pattern) in enumerate(cfg.stack):
+        x, _ = _run_group(cfg, pattern, params[f"group{gi}"], x, positions,
+                          mrope_positions, enc_out, cfg.sliding_window)
+    return _apply_norm(cfg, params["final_norm"], x)
+
+
+def per_example_loss_fn(cfg, params, example) -> jax.Array:
+    """One-example loss for per-example (DP) gradients."""
+    batch = jax.tree_util.tree_map(lambda a: a[None], example)
+    return loss_fn(cfg, params, batch)
+
+
+# ---------------------------------------------------------------------------
+# KV caches & decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg, spec, batch: int, max_len: int) -> dict:
+    c: dict = {}
+    if spec.mixer == "attn":
+        c["attn"] = attn.gqa_init_cache(cfg, batch, max_len, cfg.cdtype)
+    elif spec.mixer == "mla":
+        c["attn"] = attn.mla_init_cache(cfg, batch, max_len, cfg.cdtype)
+    elif spec.mixer == "mamba":
+        c["ssm"] = ssm_lib.mamba_init_cache(cfg, batch, cfg.cdtype)
+    elif spec.mixer == "rwkv6":
+        c["ssm"] = ssm_lib.rwkv6_init_cache(cfg, batch, cfg.cdtype)
+    if spec.cross_attn:
+        c["cross"] = {
+            "k": jnp.zeros((batch, cfg.n_audio_ctx, cfg.n_kv_heads, cfg.head_dim), cfg.cdtype),
+            "v": jnp.zeros((batch, cfg.n_audio_ctx, cfg.n_kv_heads, cfg.head_dim), cfg.cdtype),
+        }
+    return c
+
+
+def init_cache(cfg, batch: int, max_len: int) -> PyTree:
+    cache = {}
+    for gi, (repeat, pattern) in enumerate(cfg.stack):
+        def one():
+            return {f"e{j}": _layer_cache(cfg, spec, batch, max_len)
+                    for j, spec in enumerate(pattern)}
+
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (repeat,) + x.shape), one()
+        )
+        cache[f"group{gi}"] = stacked
+    return cache
+
+
+def cache_spec(cfg, batch: int, max_len: int) -> PyTree:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def decode_window(cfg) -> int | None:
+    return cfg.sliding_window
+
+
+def _layer_decode(cfg, spec, p, x, cache, index, window):
+    h = _apply_norm(cfg, p["norm1"], x)
+    if spec.mixer == "attn":
+        h, new_attn = attn.gqa_decode(p["mixer"], h, cache["attn"], index, cfg,
+                                      window=window)
+        cache = dict(cache, attn=new_attn)
+    elif spec.mixer == "mla":
+        h, new_attn = attn.mla_decode(p["mixer"], h, cache["attn"], index, cfg,
+                                      window=window)
+        cache = dict(cache, attn=new_attn)
+    elif spec.mixer == "mamba":
+        h, new_ssm = ssm_lib.mamba_decode(p["mixer"], h, cache["ssm"], cfg)
+        cache = dict(cache, ssm=new_ssm)
+    elif spec.mixer == "rwkv6":
+        h, new_ssm = ssm_lib.rwkv6_decode(p["mixer"], h, cache["ssm"], cfg)
+        cache = dict(cache, ssm=new_ssm)
+    x = x + h
+    if spec.cross_attn:
+        h = _apply_norm(cfg, p["norm_cross"], x)
+        h = attn.cross_decode(p["cross"], h, cache["cross"], cfg)
+        x = x + h
+    h = _apply_norm(cfg, p["norm2"], x)
+    if spec.ffn == "moe":
+        h, _ = moe_lib.moe_apply(p["ffn"], h, cfg.replace(moe_groups=1))
+    else:
+        h = ffn_apply(p["ffn"], h, cfg.ffn_kind)
+    return x + h, cache
+
+
+def decode_step(cfg, params, cache, tokens, index) -> tuple[jax.Array, PyTree]:
+    """One-token decode. tokens: [B,1] int32; index: scalar int32 position."""
+    emb = params[pname("embed", "vocab", "embed")]
+    x = emb[tokens].astype(cfg.cdtype)
+    window = cfg.sliding_window
+    new_cache = {}
+    for gi, (repeat, pattern) in enumerate(cfg.stack):
+        stacked_p = params[f"group{gi}"]
+        stacked_c = cache[f"group{gi}"]
+
+        def body(x, pc):
+            layer_p, layer_c = pc
+            out_c = {}
+            for j, spec in enumerate(pattern):
+                x, c = _layer_decode(cfg, spec, layer_p[f"e{j}"], x,
+                                     layer_c[f"e{j}"], index, window)
+                out_c[f"e{j}"] = c
+            return x, out_c
+
+        if cfg.scan_layers and repeat > 1:
+            x, out_stacked = jax.lax.scan(body, x, (stacked_p, stacked_c))
+        else:
+            outs = []
+            for r in range(repeat):
+                lp = jax.tree_util.tree_map(lambda t: t[r], stacked_p)
+                lc = jax.tree_util.tree_map(lambda t: t[r], stacked_c)
+                x, oc = body(x, (lp, lc))
+                outs.append(oc)
+            out_stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs
+            )
+        new_cache[f"group{gi}"] = out_stacked
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params[pname("embed", "vocab", "embed")].T.astype(cfg.cdtype)
+    else:
+        logits = x @ params[pname("head", "embed", "vocab")].astype(cfg.cdtype)
+    return logits, new_cache

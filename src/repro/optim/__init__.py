@@ -1,0 +1,12 @@
+"""Pure-pytree optimizers (no optax dependency)."""
+
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    momentum,
+    sgd,
+    get_optimizer,
+)
+
+__all__ = ["Optimizer", "adafactor", "adamw", "momentum", "sgd", "get_optimizer"]

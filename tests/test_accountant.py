@@ -1,0 +1,95 @@
+"""RDP accountant: closed forms, monotonicity, inversion round-trips."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accountant import (
+    DEFAULT_ORDERS,
+    RDPAccountant,
+    compute_epsilon,
+    compute_rdp_sgm,
+    rdp_to_eps_delta,
+    sigma_for_epsilon,
+    steps_for_epsilon,
+)
+
+
+def test_gaussian_closed_form():
+    # p=1 is the plain Gaussian mechanism: rdp(alpha) = alpha/(2 sigma^2)
+    orders = [2.0, 4.0, 8.0]
+    rdp = compute_rdp_sgm(1.0, 2.0, 1, orders)
+    for a, r in zip(orders, rdp):
+        assert r == pytest.approx(a / (2 * 4.0), rel=1e-9)
+
+
+def test_zero_sampling_is_free():
+    assert compute_epsilon(0.0, 1.0, 1000, 1e-5) == 0.0
+
+
+def test_fractional_integer_continuity():
+    # RDP should be continuous across integer orders.
+    for alpha in [3, 7, 15]:
+        lo = compute_rdp_sgm(0.02, 1.0, 1, [alpha - 1e-3])[0]
+        mid = compute_rdp_sgm(0.02, 1.0, 1, [float(alpha)])[0]
+        hi = compute_rdp_sgm(0.02, 1.0, 1, [alpha + 1e-3])[0]
+        assert lo <= mid * 1.01 + 1e-9
+        assert mid <= hi * 1.01 + 1e-9
+        assert abs(hi - lo) / max(mid, 1e-12) < 0.05
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.floats(1e-4, 0.5),
+    sigma=st.floats(0.5, 5.0),
+    steps=st.integers(1, 2000),
+)
+def test_monotone_in_steps(p, sigma, steps):
+    e1 = compute_epsilon(p, sigma, steps, 1e-5)
+    e2 = compute_epsilon(p, sigma, steps * 2, 1e-5)
+    assert e2 >= e1 - 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.floats(1e-4, 0.5), sigma=st.floats(0.5, 4.0))
+def test_monotone_in_sigma(p, sigma):
+    e1 = compute_epsilon(p, sigma, 100, 1e-5)
+    e2 = compute_epsilon(p, sigma * 1.5, 100, 1e-5)
+    assert e2 <= e1 + 1e-9
+
+
+def test_sigma_inversion_roundtrip():
+    p, steps, delta, target = 0.01, 500, 1e-5, 2.0
+    sigma = sigma_for_epsilon(p, steps, target, delta)
+    eps = compute_epsilon(p, sigma, steps, delta)
+    assert eps <= target * 1.001
+    # slightly smaller sigma must violate the budget
+    assert compute_epsilon(p, sigma * 0.97, steps, delta) > target * 0.999
+
+
+def test_steps_inversion():
+    p, sigma, delta, target = 0.02, 1.0, 1e-5, 3.0
+    t = steps_for_epsilon(p, sigma, target, delta)
+    assert compute_epsilon(p, sigma, t, delta) <= target
+    assert compute_epsilon(p, sigma, t + 1, delta) > target
+
+
+def test_accountant_state():
+    acct = RDPAccountant(sampling_rate=0.01, noise_multiplier=1.0, delta=1e-5)
+    assert acct.epsilon() == 0.0
+    acct.step(100)
+    e100 = acct.epsilon()
+    acct.step(100)
+    assert acct.epsilon() > e100
+    assert acct.epsilon() == pytest.approx(
+        compute_epsilon(0.01, 1.0, 200, 1e-5), rel=1e-9
+    )
+
+
+def test_paper_budget_settings_reachable():
+    # Paper's budgets: eps 2.0 (GEMINI), 5.6 (pancreas), 0.62 (x-ray).
+    for eps in [2.0, 5.6, 0.62]:
+        sigma = sigma_for_epsilon(0.01, 300, eps, 1e-5)
+        assert 0.3 < sigma < 60.0

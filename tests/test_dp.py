@@ -1,0 +1,149 @@
+"""DP mechanics: clipping invariants, sensitivity bound, ghost equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dp as dp_lib
+from repro.models.tabular import ghost_clipped_grad_sum_mlp, mlp_init
+
+
+def _quad_loss(params, ex):
+    pred = ex["x"] @ params["w"] + params["b"]
+    return jnp.sum((pred - ex["y"]) ** 2)
+
+
+def _make(batch_size, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "x": jnp.asarray(rng.normal(0, 1, (batch_size, d)).astype(np.float32)),
+        "y": jnp.asarray(rng.normal(0, 1, (batch_size,)).astype(np.float32)),
+    }
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bs=st.integers(1, 12),
+    c=st.floats(0.1, 5.0),
+    micro=st.integers(1, 4),
+)
+def test_clipped_sum_norm_bound(bs, c, micro):
+    params = {"w": jnp.ones((4,)) * 3.0, "b": jnp.ones(())}
+    batch = _make(bs, 4)
+    g, _ = dp_lib.per_example_clipped_grad_sum(
+        _quad_loss, params, batch, clip_norm=c, microbatch_size=micro
+    )
+    norm = float(dp_lib.global_l2_norm(g))
+    assert norm <= bs * c * (1 + 1e-5)
+
+
+def test_sensitivity_bound():
+    """Replacing one example changes the clipped sum by at most 2C."""
+    params = {"w": jnp.ones((4,)), "b": jnp.zeros(())}
+    c = 0.7
+    b1 = _make(8, 4, seed=1)
+    b2 = {k: v.copy() for k, v in b1.items()}
+    b2["x"] = b2["x"].at[3].set(100.0)  # adversarial record
+    b2["y"] = b2["y"].at[3].set(-50.0)
+    g1, _ = dp_lib.per_example_clipped_grad_sum(_quad_loss, params, b1, clip_norm=c)
+    g2, _ = dp_lib.per_example_clipped_grad_sum(_quad_loss, params, b2, clip_norm=c)
+    diff = jax.tree_util.tree_map(lambda a, b: a - b, g1, g2)
+    assert float(dp_lib.global_l2_norm(diff)) <= 2 * c * (1 + 1e-5)
+
+
+def test_mask_zeroes_padded_examples():
+    params = {"w": jnp.ones((4,)), "b": jnp.zeros(())}
+    batch = _make(8, 4)
+    mask = jnp.asarray([1, 1, 1, 0, 0, 0, 0, 0], jnp.float32)
+    g_mask, _ = dp_lib.per_example_clipped_grad_sum(
+        _quad_loss, params, batch, clip_norm=1.0, mask=mask
+    )
+    small = {k: v[:3] for k, v in batch.items()}
+    g_small, _ = dp_lib.per_example_clipped_grad_sum(
+        _quad_loss, params, small, clip_norm=1.0
+    )
+    for a, b in zip(jax.tree_util.tree_leaves(g_mask),
+                    jax.tree_util.tree_leaves(g_small)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_noise_shares_compose():
+    """Sum of H shares ~ N(0, (C sigma)^2): check variance statistically."""
+    template = {"w": jnp.zeros((2000,))}
+    c, sigma, h = 1.5, 2.0, 8
+    key = jax.random.key(0)
+    total = jnp.zeros((2000,))
+    for i in range(h):
+        nz = dp_lib.noise_share(
+            jax.random.fold_in(key, i), template,
+            clip_norm=c, noise_multiplier=sigma, n_shares=h,
+        )
+        total = total + nz["w"]
+    emp_std = float(jnp.std(total))
+    assert emp_std == pytest.approx(c * sigma, rel=0.1)
+
+
+def test_ghost_norms_match_vmap_grads():
+    """Ghost norms for an MLP == true per-example grad norms."""
+    sizes = [10, 16, 8, 1]
+    key = jax.random.key(0)
+    params = mlp_init(key, sizes)
+    rng = np.random.default_rng(0)
+    batch = {
+        "x": jnp.asarray(rng.normal(0, 1, (12, 10)).astype(np.float32)),
+        "y": jnp.asarray((rng.random(12) > 0.5).astype(np.float32)),
+    }
+
+    from repro.models.tabular import make_mlp_classifier
+
+    model = make_mlp_classifier(sizes, "binary")
+
+    def one_norm(ex):
+        g = jax.grad(model.loss_fn)(params, ex)
+        return dp_lib.global_l2_norm(g)
+
+    true_norms = jax.vmap(one_norm)(batch)
+    _, ghost_norms = ghost_clipped_grad_sum_mlp(
+        params, batch, sizes, "binary", clip_norm=1.0
+    )
+    np.testing.assert_allclose(
+        np.asarray(true_norms), np.asarray(ghost_norms), rtol=2e-4
+    )
+
+
+def test_ghost_clipped_grads_match_vmap_clip():
+    sizes = [6, 12, 4]
+    key = jax.random.key(1)
+    params = mlp_init(key, sizes)
+    rng = np.random.default_rng(1)
+    batch = {
+        "x": jnp.asarray(rng.normal(0, 2, (10, 6)).astype(np.float32)),
+        "y": jnp.asarray(rng.integers(0, 4, 10).astype(np.int32)),
+    }
+    from repro.models.tabular import make_mlp_classifier
+
+    model = make_mlp_classifier(sizes, "multiclass")
+    c = 0.5
+    g_ref, _ = dp_lib.per_example_clipped_grad_sum(
+        model.loss_fn, params, batch, clip_norm=c, microbatch_size=5
+    )
+    g_ghost, _ = ghost_clipped_grad_sum_mlp(params, batch, sizes, "multiclass", c)
+    for k in g_ref:
+        np.testing.assert_allclose(
+            np.asarray(g_ref[k]["w"]), np.asarray(g_ghost[k]["w"]),
+            atol=3e-5, rtol=1e-3,
+        )
+        np.testing.assert_allclose(
+            np.asarray(g_ref[k]["b"]), np.asarray(g_ghost[k]["b"]),
+            atol=3e-5, rtol=1e-3,
+        )
+
+
+def test_ghost_norms_seq_matches_2d_when_seq1():
+    a = jnp.asarray(np.random.default_rng(0).normal(0, 1, (5, 1, 7)).astype(np.float32))
+    g = jnp.asarray(np.random.default_rng(1).normal(0, 1, (5, 1, 3)).astype(np.float32))
+    n_seq = dp_lib.ghost_norms_seq_ref(a, g)
+    n_2d = dp_lib.ghost_norms_2d(a[:, 0], g[:, 0])
+    np.testing.assert_allclose(np.asarray(n_seq), np.asarray(n_2d), rtol=1e-5)

@@ -1,0 +1,66 @@
+"""Extension features: DeepSeek MTP head, blocked-op property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.kernels.ghost_norm.ops import ghost_norm_blocked
+from repro.kernels.ghost_norm.ref import ghost_norm_ref
+from repro.models import transformer as tf
+from repro.models.attention import _causal_mask, _sdpa, _sdpa_blocked
+
+
+def test_mtp_loss_adds_second_horizon():
+    cfg = get_smoke_config("deepseek-v3-671b").replace(mtp_depth=1)
+    params = tf.init(cfg, jax.random.key(0))
+    assert "mtp" in params
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (2, 12), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.key(2), (2, 12), 0,
+                                     cfg.vocab_size),
+    }
+    loss_mtp = tf.loss_fn(cfg, params, batch)
+    plain = {k: v for k, v in params.items() if k != "mtp"}
+    loss_plain = tf.loss_fn(cfg.replace(mtp_depth=0), plain, batch)
+    assert float(loss_mtp) > float(loss_plain)  # extra CE term
+    g = jax.grad(lambda p: tf.loss_fn(cfg, p, batch))(params)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s=st.integers(2, 96),
+    d=st.sampled_from([8, 24]),
+    block=st.sampled_from([16, 32]),
+)
+def test_ghost_norm_blocked_property(b, s, d, block):
+    k = jax.random.key(s * 7 + d)
+    a = jax.random.normal(jax.random.fold_in(k, 1), (b, s, d))
+    g = 0.3 * jax.random.normal(jax.random.fold_in(k, 2), (b, s, d // 2 or 1))
+    np.testing.assert_allclose(
+        np.asarray(ghost_norm_ref(a, g)),
+        np.asarray(ghost_norm_blocked(a, g, block=block)),
+        rtol=5e-4, atol=1e-5,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(4, 80),
+    window=st.one_of(st.none(), st.integers(2, 32)),
+    bk=st.sampled_from([8, 32]),
+)
+def test_blocked_attention_property(s, window, bk):
+    k = jax.random.key(s * 13 + (window or 0))
+    q = 0.5 * jax.random.normal(jax.random.fold_in(k, 1), (1, s, 2, 8))
+    kk = 0.5 * jax.random.normal(jax.random.fold_in(k, 2), (1, s, 1, 8))
+    v = jax.random.normal(jax.random.fold_in(k, 3), (1, s, 1, 8))
+    ref = _sdpa(q, kk, v, _causal_mask(s, s, 0, window))
+    blk = _sdpa_blocked(q, kk, v, causal=True, window=window, block_k=bk)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(blk), atol=1e-5)

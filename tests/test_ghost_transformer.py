@@ -1,0 +1,121 @@
+"""Ghost-clipping transformer path: exactness vs the faithful per-example
+path, plus the blocked-attention and quadratic-RWKV perf variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import dp as dp_lib
+from repro.core.ghost import forward_ghost, ghost_clipped_grad_sum
+from repro.models import transformer as tf
+from repro.models.attention import _causal_mask, _sdpa, _sdpa_blocked
+
+DENSE_ARCHS = ["nemotron-4-340b", "olmo-1b", "smollm-360m", "gemma-7b"]
+
+
+def _batch(cfg, b=4, s=12, key=1):
+    k = jax.random.key(key)
+    return {
+        "tokens": jax.random.randint(k, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.fold_in(k, 1), (b, s), 0,
+                                     cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", DENSE_ARCHS)
+def test_ghost_loss_matches_forward(arch):
+    cfg = get_smoke_config(arch).replace(tie_embeddings=False)
+    params = tf.init(cfg, jax.random.key(0))
+    batch = _batch(cfg)
+    per_ex, _ = forward_ghost(cfg, params, batch, jnp.zeros((4,)),
+                              with_norms=False)
+    ref = tf.loss_fn(cfg, params, batch)
+    np.testing.assert_allclose(float(jnp.mean(per_ex)), float(ref), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", DENSE_ARCHS)
+@pytest.mark.parametrize("chunk", [None, 2])
+def test_ghost_norms_and_grads_exact(arch, chunk):
+    cfg = get_smoke_config(arch).replace(tie_embeddings=False)
+    params = tf.init(cfg, jax.random.key(0))
+    batch = _batch(cfg)
+
+    def one_norm(ex):
+        g = jax.grad(lambda p, e: tf.per_example_loss_fn(cfg, p, e))(params, ex)
+        return dp_lib.global_l2_norm(g)
+
+    true_norms = jax.vmap(one_norm)(batch)
+    grads, _, norms = ghost_clipped_grad_sum(cfg, params, batch,
+                                             clip_norm=0.5, chunk_size=chunk)
+    np.testing.assert_allclose(np.asarray(true_norms), np.asarray(norms),
+                               rtol=5e-5)
+    g_ref, _ = dp_lib.per_example_clipped_grad_sum(
+        lambda p, ex: tf.per_example_loss_fn(cfg, p, ex), params, batch,
+        clip_norm=0.5, microbatch_size=2,
+    )
+    for a, b in zip(jax.tree_util.tree_leaves(grads),
+                    jax.tree_util.tree_leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-6)
+
+
+def test_ghost_with_remat_and_flash():
+    cfg = get_smoke_config("nemotron-4-340b").replace(
+        tie_embeddings=False, remat=True, use_flash=True,
+    )
+    params = tf.init(cfg, jax.random.key(0))
+    batch = _batch(cfg)
+
+    def one_norm(ex):
+        g = jax.grad(lambda p, e: tf.per_example_loss_fn(
+            cfg.replace(use_flash=False), p, e))(params, ex)
+        return dp_lib.global_l2_norm(g)
+
+    true_norms = jax.vmap(one_norm)(batch)
+    _, _, norms = ghost_clipped_grad_sum(cfg, params, batch, clip_norm=1.0)
+    np.testing.assert_allclose(np.asarray(true_norms), np.asarray(norms),
+                               rtol=1e-4)
+
+
+def test_ghost_rejects_unsupported_archs():
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    params = tf.init(cfg, jax.random.key(0))
+    with pytest.raises(AssertionError):
+        forward_ghost(cfg, params, _batch(cfg), jnp.zeros((4,)))
+
+
+@pytest.mark.parametrize(
+    "s,causal,window,bk",
+    [(100, True, None, 32), (256, True, 64, 128), (64, False, None, 48)],
+)
+def test_blocked_attention_matches_reference(s, causal, window, bk):
+    k = jax.random.key(0)
+    q = 0.5 * jax.random.normal(jax.random.fold_in(k, 1), (2, s, 4, 32))
+    kk = 0.5 * jax.random.normal(jax.random.fold_in(k, 2), (2, s, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(k, 3), (2, s, 2, 32))
+    mask = _causal_mask(s, s, 0, window) if causal else None
+    ref = _sdpa(q, kk, v, mask)
+    blk = _sdpa_blocked(q, kk, v, causal=causal, window=window, block_k=bk)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(blk), atol=5e-6)
+
+
+def test_blocked_attention_grads_flow():
+    k = jax.random.key(0)
+    q = jax.random.normal(jax.random.fold_in(k, 1), (1, 64, 4, 16))
+    kk = jax.random.normal(jax.random.fold_in(k, 2), (1, 64, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(k, 3), (1, 64, 2, 16))
+    g = jax.grad(lambda q_: jnp.sum(_sdpa_blocked(q_, kk, v) ** 2))(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_rwkv_quadratic_matches_states_impl():
+    from repro.models import transformer as tf_
+
+    cfg_s = get_smoke_config("rwkv6-3b")
+    cfg_q = cfg_s.replace(rwkv_chunk_impl="quadratic", rwkv_chunk=8)
+    params = tf_.init(cfg_s, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 29), 0, cfg_s.vocab_size)
+    l_s, _ = tf_.forward(cfg_s, params, {"tokens": toks})
+    l_q, _ = tf_.forward(cfg_q, params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(l_s), np.asarray(l_q), atol=5e-5)

@@ -1,0 +1,74 @@
+"""SecAgg: exact mask cancellation, privacy of individual uploads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.secagg import (
+    SecAggConfig,
+    SecAggSession,
+    secagg_message_bytes,
+    secure_sum,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 6),
+    dim=st.integers(1, 32),
+    seed=st.integers(0, 1000),
+)
+def test_secure_sum_matches_plain_sum(n, dim, seed):
+    rng = np.random.default_rng(seed)
+    vals = [jnp.asarray(rng.normal(0, 3, dim).astype(np.float32))
+            for _ in range(n)]
+    out = secure_sum(vals, SecAggConfig(n, frac_bits=16, seed=seed))
+    expected = np.sum([np.asarray(v) for v in vals], axis=0)
+    # quantisation error: n participants x 2^-17 rounding each
+    np.testing.assert_allclose(np.asarray(out), expected, atol=n * 2 ** -15)
+
+
+def test_masks_cancel_exactly():
+    cfg = SecAggConfig(5, frac_bits=16, seed=7)
+    session = SecAggSession(cfg, {"w": jnp.zeros((8,))})
+    with np.errstate(over="ignore"):
+        total = sum(np.asarray(session.mask_for(i)[0], dtype=np.uint64)
+                    for i in range(5)) % (1 << 32)
+    assert (total == 0).all()
+
+
+def test_upload_is_masked():
+    """A single ciphertext must not reveal the plaintext."""
+    cfg = SecAggConfig(3, frac_bits=16, seed=3)
+    session = SecAggSession(cfg, {"w": jnp.zeros((64,))})
+    x = {"w": jnp.ones((64,))}
+    up = session.upload(0, x)[0]
+    # uniform masks: ciphertext should look nothing like the fixed plaintext
+    plain = np.round(np.ones(64) * cfg.scale).astype(np.uint32)
+    assert (up != plain).mean() > 0.9
+
+
+def test_aggregate_requires_all_uploads():
+    cfg = SecAggConfig(3, seed=0)
+    session = SecAggSession(cfg, jnp.zeros((4,)))
+    ups = [session.upload(i, jnp.ones((4,))) for i in range(2)]
+    with pytest.raises(ValueError):
+        session.aggregate(ups)
+
+
+def test_pytree_structure_roundtrip():
+    tree = {"a": jnp.array([1.5, -2.0]), "b": {"c": jnp.array(3.25)}}
+    out = secure_sum([tree, tree], SecAggConfig(2))
+    assert set(out) == {"a", "b"}
+    np.testing.assert_allclose(np.asarray(out["a"]), [3.0, -4.0], atol=1e-4)
+    np.testing.assert_allclose(float(out["b"]["c"]), 6.5, atol=1e-4)
+
+
+def test_comm_cost_model_matches_paper_shape():
+    # cost grows linearly in params and in participants for the aggregator
+    c1 = secagg_message_bytes(166_771, 8)   # GEMINI MLP row of Supp Table 1
+    c2 = secagg_message_bytes(166_771, 16)
+    assert c2["aggregator_bytes"] > 1.9 * c1["aggregator_bytes"]
+    assert c1["per_participant_bytes"] > c1["plain_per_participant_bytes"]

@@ -1,0 +1,150 @@
+"""Substrate: optimizers, checkpointing, data generators, MIA machinery."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core.mia import auroc, lira_attack, tpr_at_fpr
+from repro.data import (
+    dirichlet_partition,
+    make_gemini_like,
+    make_lm_stream,
+    make_pancreas_like,
+    make_xray_like,
+)
+from repro.data.partition import train_test_split_silos
+from repro.optim import get_optimizer
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adamw", "adafactor"])
+def test_optimizers_descend(name):
+    opt = get_optimizer(name, 0.05)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3,))}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < l0 * 0.05
+
+
+def test_adafactor_state_is_factored():
+    opt = get_optimizer("adafactor", 0.01)
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    state = opt.init(params)
+    assert state.vr["w"].shape == (64,)
+    assert state.vc["w"].shape == (32,)
+    assert state.vr["b"].shape == (32,)   # vectors keep full second moment
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.asarray(1.5), "d": [jnp.ones((4,), jnp.bfloat16)]},
+    }
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    save_checkpoint(path, tree, step=7, metadata={"arch": "test"})
+    loaded, step, meta = load_checkpoint(path)
+    assert step == 7 and meta["arch"] == "test"
+    np.testing.assert_array_equal(np.asarray(loaded["a"]), np.asarray(tree["a"]))
+    assert loaded["b"]["d"][0].dtype == jnp.bfloat16
+
+
+def test_gemini_like_matches_published_stats():
+    silos = make_gemini_like(n_total=2000)
+    assert len(silos) == 8
+    assert silos[0].x.shape[1] == 436
+    sizes = np.array([len(p) for p in silos])
+    assert sizes.max() > 2.5 * sizes.min()          # heavy skew (Fig 2a)
+    rate = np.concatenate([p.y for p in silos]).mean()
+    assert 0.08 < rate < 0.30                        # mortality imbalance
+
+
+def test_pancreas_like_matches_published_stats():
+    silos = make_pancreas_like(n_total=600, n_genes=2000)
+    assert len(silos) == 5
+    assert silos[0].x.shape[1] == 2000
+    sizes = [len(p) for p in silos]
+    assert min(sizes) == sizes[3]                    # Wang (P4) is tiny
+    labels = np.concatenate([p.y for p in silos])
+    assert set(np.unique(labels)) <= {0, 1, 2, 3}
+
+
+def test_xray_like_labels():
+    silos = make_xray_like(n_total=300, image_size=16)
+    assert len(silos) == 3
+    y = np.concatenate([p.y for p in silos])
+    assert y.shape[1] == 4
+    # "No Finding" is mutually exclusive with the pathologies
+    assert ((y[:, 3] == 1) & (y[:, :3].sum(1) > 0)).sum() == 0
+
+
+def test_dirichlet_partition_is_label_skewed():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (1200, 4)).astype(np.float32)
+    y = rng.integers(0, 3, 1200)
+    silos = dirichlet_partition(x, y, 4, alpha=0.2, seed=0)
+    assert sum(len(p) for p in silos) == 1200
+    # at least one silo should be clearly skewed at alpha=0.2
+    props = [np.bincount(p.y.astype(int), minlength=3) / len(p) for p in silos]
+    assert max(p.max() for p in props) > 0.55
+
+
+def test_train_test_split():
+    silos = make_gemini_like(n_total=800)
+    train, tx, ty = train_test_split_silos(silos, 0.25, seed=0)
+    assert len(train) == len(silos)
+    total = sum(len(p) for p in silos)
+    assert abs(len(tx) - total * 0.25) < len(silos) * 2
+
+
+def test_lm_stream_learnable_structure():
+    stream = make_lm_stream(64, 32, seed=0)
+    b = stream.batch(0, 8)
+    assert b["tokens"].shape == (8, 32)
+    # ~85% of transitions follow the drift rule
+    drift_ok = (np.diff(np.concatenate(
+        [b["tokens"], b["labels"][:, -1:]], axis=1), axis=1) % 64)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).mean() > 0.99
+
+
+def test_auroc_sanity():
+    scores = np.array([0.9, 0.8, 0.7, 0.3, 0.2, 0.1])
+    labels = np.array([1, 1, 1, 0, 0, 0])
+    assert auroc(scores, labels) == 1.0
+    assert abs(auroc(np.random.default_rng(0).normal(0, 1, 2000),
+                     np.random.default_rng(1).integers(0, 2, 2000)) - 0.5) < 0.05
+
+
+def test_lira_detects_overfit_model():
+    """A nearest-neighbour-ish overfit model must be attackable; LiRA AUROC
+    should be well above 0.5 for it."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (300, 6)).astype(np.float32)
+    y = (rng.random(300) > 0.5).astype(np.float32)  # pure noise labels
+
+    def train_fn(xt, yt, seed):
+        return (xt, yt)  # memorising "model"
+
+    def conf_fn(model, xq, yq):
+        xt, yt = model
+        d = ((xq[:, None] - xt[None]) ** 2).sum(-1)
+        nearest = d.argmin(1)
+        pred = yt[nearest]
+        close = d.min(1) < 1e-9
+        p = np.where(pred == yq, np.where(close, 0.99, 0.6),
+                     np.where(close, 0.01, 0.4))
+        return p
+
+    res = lira_attack(train_fn, conf_fn, x, y, n_shadows=8, seed=0)
+    assert res.auroc > 0.8
+    assert 0 <= res.tpr_at_1pct_fpr <= 1
