@@ -16,6 +16,7 @@ MODULES = [
     ("xray_utility", "Fig 4c / Supp T8: chest radiology (4 arms)"),
     ("mia", "Fig 5: LiRA membership inference, FL vs DeCaPH"),
     ("secagg_cost", "Supp Fig 1 / Supp T1: SecAgg wall-clock + comm"),
+    ("sim_report", "Systems: 5 arms on a heterogeneous trace + dropout recovery"),
     ("pate_ablation", "Supp (Existing frameworks): PATE vs DeCaPH ablation"),
     ("accountant_table", "Methods: RDP accounting for the paper's budgets"),
     ("kernel_bench", "Kernels: oracle timings + traffic ratios"),

@@ -1,0 +1,95 @@
+"""Heterogeneous hospitals: what deployment actually costs.
+
+Five hospitals with a 8x compute spread and a flaky mid-tier site that
+drops off the network mid-training and rejoins.  The discrete-event
+simulator (``repro.sim``) replays DeCaPH and the async-gossip D-PSGD arm
+under these conditions and reports what the idealized runtime cannot:
+simulated wall-clock, bytes on wire, and a real Shamir mask recovery when
+the dropout lands mid-round.
+
+Run:  PYTHONPATH=src python examples/heterogeneous_hospitals.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dp import DPConfig
+from repro.core.federation import Model, normalize_participants
+from repro.data import make_gemini_like
+from repro.sim import (
+    SimConfig,
+    Topology,
+    nodes_from_trace,
+    simulate_decaph,
+    simulate_gossip,
+)
+
+
+def main() -> None:
+    silos = normalize_participants(
+        make_gemini_like(seed=0, n_total=1500, n_silos=5, n_features=32)
+    )
+
+    def init_fn(key):
+        return {"w": jnp.zeros((32,)), "b": jnp.zeros(())}
+
+    def loss(params, ex):
+        logit = ex["x"] @ params["w"] + params["b"]
+        y = ex["y"]
+        return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+    def predict(params, x):
+        return jax.nn.sigmoid(x @ params["w"] + params["b"])
+
+    model = Model(init_fn, loss, predict)
+
+    # Research centre (500 ex/s) down to community hospital (60 ex/s);
+    # hospital 3 loses connectivity at t=0.3s and rejoins at t=2.0s.
+    trace = [
+        {"throughput": 500.0, "overhead": 0.02},
+        {"throughput": 300.0, "overhead": 0.02},
+        {"throughput": 180.0, "overhead": 0.03},
+        {"throughput": 110.0, "overhead": 0.04, "dropouts": [[0.3, 2.0]]},
+        {"throughput": 60.0, "overhead": 0.05},
+    ]
+    cfg = SimConfig(
+        rounds=15, batch_size=64, lr=0.4, seed=0,
+        dp=DPConfig(clip_norm=1.0, noise_multiplier=0.8, microbatch_size=8),
+    )
+
+    def accuracy(params):
+        x = np.concatenate([p.x for p in silos])
+        y = np.concatenate([p.y for p in silos])
+        return ((np.asarray(model.predict_fn(params, jnp.asarray(x))) > 0.5)
+                == y).mean()
+
+    dec = simulate_decaph(
+        model, silos, nodes_from_trace(trace), Topology.full(5), cfg
+    )
+    print("DeCaPH (synchronous rounds, dropout-robust SecAgg)")
+    print(f"  simulated wall-clock : {dec.wall_clock:.2f} s")
+    print(f"  bytes on wire        : {dec.bytes_on_wire:,.0f}")
+    print(f"  Shamir recoveries    : {dec.recoveries} "
+          f"(hospital 3 dropped mid-round)")
+    print(f"  epsilon spent        : {dec.epsilon:.2f}")
+    print(f"  pooled accuracy      : {accuracy(dec.params):.3f}")
+
+    gos = simulate_gossip(
+        model, silos, nodes_from_trace(trace), Topology.k_regular(5, 2), cfg
+    )
+    print("\nAsync gossip D-PSGD (no rounds, 2-regular graph)")
+    print(f"  simulated wall-clock : {gos.wall_clock:.2f} s "
+          f"(straggler-paced, but compute overlaps communication)")
+    print(f"  bytes on wire        : {gos.bytes_on_wire:,.0f}")
+    print(f"  consensus accuracy   : {accuracy(gos.params):.3f}")
+    spread = [float(np.linalg.norm(np.asarray(p['w'])
+                                   - np.asarray(gos.params['w'])))
+              for p in gos.per_node_params]
+    print(f"  model disagreement   : max |w_i - w_avg| = {max(spread):.4f} "
+          f"(gossip keeps nodes approximately synced)")
+
+
+if __name__ == "__main__":
+    main()

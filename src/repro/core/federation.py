@@ -6,6 +6,11 @@ experiments (Figs. 2-5) can be reproduced end to end.  The SPMD fast path for
 pod-scale models lives in ``repro.core.decaph_step``; both paths share the DP
 mechanics in ``repro.core.dp`` and are equivalence-tested.
 
+These runtimes are *idealized*: every hospital is infinitely fast, always
+online, and communication is free.  For simulated wall-clock, bytes-on-wire,
+stragglers and dropout (including SecAgg mask recovery), drive the same arms
+through the discrete-event simulator in ``repro.sim``.
+
 Arms implemented (Study design):
   * ``decaph``  — the paper's framework: shared Poisson rate, per-example clip,
     per-participant noise shares, SecAgg sum, rotating leader.

@@ -14,10 +14,24 @@ variant faithfully:
     (mod 2^32); masks cancel *exactly* in the field sum, so the aggregator
     only ever learns the total.
 
-No dropout-recovery (Shamir shares) is implemented: the paper's threat model
-assumes hospitals follow the protocol and stay online; this is recorded in
-DESIGN.md.  Exactness (mask cancellation) is property-tested in
-``tests/test_secagg.py``.
+Two session flavours:
+
+  * ``SecAggSession`` — the paper's honest-but-curious variant: hospitals
+    follow the protocol and stay online, so every upload must arrive
+    (``aggregate`` fails loudly otherwise — a missing upload would leave
+    un-cancelled masks and a silently corrupt sum).
+  * ``DropoutRobustSession`` — Bonawitz-style dropout recovery: every
+    participant derives its pairwise pads from a real Diffie-Hellman
+    exchange (toy 61-bit group standing in for X25519) and Shamir
+    secret-shares its DH secret among the cohort at setup.  When a
+    participant drops before uploading, any ``threshold`` survivors can
+    reveal their shares, the facilitator reconstructs the dropped secret,
+    regenerates the survivor-side pads involving the dropped party, and
+    cancels them — the sum of the *surviving* uploads is recovered exactly.
+    ``repro.sim`` injects dropouts against this path.
+
+Exactness (mask cancellation) is property-tested in ``tests/test_secagg.py``;
+dropout recovery in ``tests/test_secagg_dropout.py``.
 """
 
 from __future__ import annotations
@@ -115,8 +129,11 @@ class SecAggSession:
         if len(uploads) != self.cfg.n_participants:
             raise ValueError(
                 "honest-but-curious SecAgg requires all participants "
-                f"({len(uploads)} of {self.cfg.n_participants} uploads)"
+                f"({len(uploads)} of {self.cfg.n_participants} uploads); a "
+                "missing upload leaves un-cancelled masks in the sum — use "
+                "DropoutRobustSession if participants may drop out"
             )
+        _check_uploads(uploads, self._leaves)
         total = [np.zeros(np.shape(x), _FIELD_DTYPE) for x in self._leaves]
         with np.errstate(over="ignore"):  # modular wraparound is the protocol
             for up in uploads:
@@ -125,11 +142,269 @@ class SecAggSession:
         return jax.tree_util.tree_unflatten(self._treedef, decoded)
 
 
+def _check_uploads(
+    uploads: Sequence[list[np.ndarray]], leaves: Sequence[Any]
+) -> None:
+    """Fail loudly on short/misshapen ciphertexts (silent-garbage guard)."""
+    for k, up in enumerate(uploads):
+        if len(up) != len(leaves):
+            raise ValueError(
+                f"upload {k} has {len(up)} leaves, template has "
+                f"{len(leaves)} — truncated or mis-structured ciphertext"
+            )
+        for li, (u, leaf) in enumerate(zip(up, leaves)):
+            if tuple(np.shape(u)) != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"upload {k} leaf {li} shape {np.shape(u)} != template "
+                    f"shape {np.shape(leaf)}"
+                )
+
+
 def secure_sum(values: Sequence[PyTree], cfg: SecAggConfig) -> PyTree:
     """Convenience: full round (upload + aggregate) over a list of pytrees."""
+    values = list(values)
+    if not values:
+        raise ValueError("secure_sum: empty value list")
+    if len(values) != cfg.n_participants:
+        raise ValueError(
+            f"secure_sum: {len(values)} value trees for "
+            f"{cfg.n_participants} participants — every participant must "
+            "contribute (dropouts need DropoutRobustSession)"
+        )
     session = SecAggSession(cfg, values[0])
     uploads = [session.upload(i, v) for i, v in enumerate(values)]
     return session.aggregate(uploads)
+
+
+# --------------------------------------------------------------------------
+# Dropout-robust SecAgg: DH pairwise seeds + Shamir recovery (Bonawitz §4).
+# --------------------------------------------------------------------------
+
+# 2^61 - 1 (Mersenne prime).  One field for both the Shamir shares and the
+# toy Diffie-Hellman group: large enough that pad seeds are unguessable in
+# simulation, small enough that Python-int modexp stays negligible next to
+# the gradient math.  A deployment would swap in X25519; the *protocol*
+# (what is shared, who reveals what, when) is what we reproduce faithfully.
+_SHAMIR_PRIME = (1 << 61) - 1
+_DH_GENERATOR = 3
+
+
+def shamir_share(
+    secret: int, n_shares: int, threshold: int, rng: np.random.Generator
+) -> list[tuple[int, int]]:
+    """Split ``secret`` into n points of a degree-(threshold-1) polynomial."""
+    if not 0 <= secret < _SHAMIR_PRIME:
+        raise ValueError("secret out of field range")
+    if not 1 <= threshold <= n_shares:
+        raise ValueError("need 1 <= threshold <= n_shares")
+    coeffs = [secret] + [
+        int(rng.integers(0, _SHAMIR_PRIME)) for _ in range(threshold - 1)
+    ]
+    shares = []
+    for x in range(1, n_shares + 1):
+        y = 0
+        for c in reversed(coeffs):  # Horner
+            y = (y * x + c) % _SHAMIR_PRIME
+        shares.append((x, y))
+    return shares
+
+
+def shamir_reconstruct(shares: Sequence[tuple[int, int]]) -> int:
+    """Lagrange-interpolate the polynomial at 0 from >= threshold shares."""
+    if not shares:
+        raise ValueError("no shares to reconstruct from")
+    if len({x for x, _ in shares}) != len(shares):
+        raise ValueError("duplicate share indices")
+    p = _SHAMIR_PRIME
+    secret = 0
+    for i, (xi, yi) in enumerate(shares):
+        num, den = 1, 1
+        for j, (xj, _) in enumerate(shares):
+            if i == j:
+                continue
+            num = num * (-xj) % p
+            den = den * (xi - xj) % p
+        secret = (secret + yi * num * pow(den, p - 2, p)) % p
+    return secret
+
+
+class DropoutRobustSession:
+    """SecAgg round that survives participants dropping before upload.
+
+    Setup (simulated in-process; each step is one real protocol message):
+      1. *advertise*: every participant i draws a DH secret u_i and
+         publishes g^{u_i}.  The pairwise pad seed is the DH agreement
+         s_ij = g^{u_i u_j} — unlike ``SecAggSession``'s shared base key,
+         neither the facilitator nor any third party can derive it.
+      2. *share keys*: i Shamir-shares u_i among all participants with a
+         reconstruction ``threshold`` t (honest-majority default).
+
+    On dropout of d (no upload received): any t survivors reveal their
+    shares of u_d, the facilitator reconstructs u_d, recomputes the pads
+    s_dj for every survivor j, and cancels them from the ciphertext sum.
+    The result equals the plain sum of the *survivors'* values.
+
+    Simplification vs. full Bonawitz: no self-masks (double masking), so a
+    participant declared dropped *after* its upload was received would have
+    its value exposed by unmasking.  We therefore never unmask received
+    uploads — late-dropping participants simply stay in the sum (their
+    contribution already arrived), matching the simulator's semantics.
+    """
+
+    def __init__(
+        self,
+        cfg: SecAggConfig,
+        template: PyTree,
+        *,
+        threshold: int | None = None,
+    ):
+        n = cfg.n_participants
+        if n < 2:
+            raise ValueError("need at least 2 participants")
+        self.cfg = cfg
+        self.threshold = threshold if threshold is not None else n // 2 + 1
+        if not 2 <= self.threshold <= n:
+            raise ValueError(f"threshold {self.threshold} not in [2, {n}]")
+        self.template = template
+        self._leaves, self._treedef = jax.tree_util.tree_flatten(template)
+        # Each participant's local randomness (one stream per party would be
+        # the deployment picture; a single seeded stream keeps tests exact).
+        rng = np.random.default_rng(np.uint64(cfg.seed) ^ np.uint64(0x5ECA66))
+        self._secret_keys = [
+            int(rng.integers(2, _SHAMIR_PRIME - 1)) for _ in range(n)
+        ]
+        self.public_keys = [
+            pow(_DH_GENERATOR, u, _SHAMIR_PRIME) for u in self._secret_keys
+        ]
+        # shares[i][j] = participant j's share of u_i (index x = j + 1)
+        self._shares = [
+            shamir_share(u, n, self.threshold, rng) for u in self._secret_keys
+        ]
+
+    # -- pads ---------------------------------------------------------------
+
+    def _pair_seed(self, holder: int, other: int) -> int:
+        """DH agreement: pow(pk_other, u_holder) == g^(u_i u_j), symmetric."""
+        return pow(
+            self.public_keys[other], self._secret_keys[holder], _SHAMIR_PRIME
+        )
+
+    @staticmethod
+    def _pad_from_seed(
+        seed: int, leaf_index: int, shape: tuple[int, ...]
+    ) -> np.ndarray:
+        key = jax.random.fold_in(
+            jax.random.key(seed % ((1 << 63) - 1)), leaf_index
+        )
+        return _prg_mask(key, shape)
+
+    def upload(self, i: int, values: PyTree) -> list[np.ndarray]:
+        """Masked ciphertext from participant i (pads vs. every peer)."""
+        leaves = jax.tree_util.tree_leaves(values)
+        if len(leaves) != len(self._leaves):
+            raise ValueError("pytree structure mismatch")
+        out = []
+        with np.errstate(over="ignore"):  # modular field arithmetic
+            for li, leaf in enumerate(leaves):
+                shape = tuple(np.shape(self._leaves[li]))
+                if tuple(np.shape(leaf)) != shape:
+                    raise ValueError(
+                        f"leaf {li} shape {np.shape(leaf)} != {shape}"
+                    )
+                v = _encode(leaf, self.cfg)
+                for j in range(self.cfg.n_participants):
+                    if j == i:
+                        continue
+                    pad = self._pad_from_seed(self._pair_seed(i, j), li, shape)
+                    v = (v + pad) if i < j else (v - pad)
+                out.append(v)
+        return out
+
+    # -- recovery -----------------------------------------------------------
+
+    def recovery_shares(
+        self, dropped: int, survivors: Sequence[int]
+    ) -> list[tuple[int, int]]:
+        """Shares of u_dropped that the survivors reveal to the facilitator."""
+        return [self._shares[dropped][j] for j in survivors]
+
+    def aggregate(
+        self, uploads: dict[int, list[np.ndarray]]
+    ) -> PyTree:
+        """Sum received ciphertexts; reconstruct + cancel dropped pads.
+
+        ``uploads`` maps participant index -> ciphertext.  Participants
+        absent from the dict are treated as dropped and recovered via
+        Shamir.  Raises if fewer than ``threshold`` uploads survive.
+        """
+        n = self.cfg.n_participants
+        survivors = sorted(uploads)
+        if any(not 0 <= s < n for s in survivors):
+            raise ValueError("upload index out of range")
+        dropped = [d for d in range(n) if d not in uploads]
+        if len(survivors) < self.threshold:
+            raise ValueError(
+                f"only {len(survivors)} uploads for threshold "
+                f"{self.threshold}: cannot reconstruct dropped masks"
+            )
+        _check_uploads([uploads[s] for s in survivors], self._leaves)
+        total = [np.zeros(np.shape(x), _FIELD_DTYPE) for x in self._leaves]
+        with np.errstate(over="ignore"):
+            for s in survivors:
+                total = [t + u for t, u in zip(total, uploads[s])]
+            for d in dropped:
+                # Any `threshold` survivors' shares reconstruct u_d exactly.
+                shares = self.recovery_shares(d, survivors[: self.threshold])
+                u_d = shamir_reconstruct(shares)
+                for j in survivors:
+                    seed = pow(self.public_keys[j], u_d, _SHAMIR_PRIME)
+                    for li in range(len(total)):
+                        pad = self._pad_from_seed(
+                            seed, li, tuple(np.shape(self._leaves[li]))
+                        )
+                        # Survivor j applied +pad if j < d else -pad; remove.
+                        total[li] = (
+                            total[li] - pad if j < d else total[li] + pad
+                        )
+        decoded = [jnp.asarray(_decode(t, self.cfg)) for t in total]
+        return jax.tree_util.tree_unflatten(self._treedef, decoded)
+
+
+def secure_sum_with_dropouts(
+    values: Sequence[PyTree | None],
+    cfg: SecAggConfig,
+    *,
+    threshold: int | None = None,
+) -> PyTree:
+    """Full dropout-robust round; ``None`` entries are dropped participants."""
+    values = list(values)
+    if len(values) != cfg.n_participants:
+        raise ValueError(
+            f"{len(values)} slots for {cfg.n_participants} participants"
+        )
+    template = next((v for v in values if v is not None), None)
+    if template is None:
+        raise ValueError("every participant dropped; nothing to aggregate")
+    session = DropoutRobustSession(cfg, template, threshold=threshold)
+    uploads = {
+        i: session.upload(i, v) for i, v in enumerate(values) if v is not None
+    }
+    return session.aggregate(uploads)
+
+
+def secagg_recovery_bytes(
+    n_participants: int, n_dropped: int = 0
+) -> dict[str, float]:
+    """Wire-cost model for the dropout-robust extension.
+
+    Setup: each participant broadcasts an 8 B public key and sends one 16 B
+    Shamir share (8 B y + index) to each peer.  Recovery: each survivor
+    reveals one share per dropped participant to the facilitator.
+    """
+    n, d = n_participants, n_dropped
+    setup = n * 8.0 + n * (n - 1) * 16.0
+    recovery = (n - d) * d * 16.0
+    return {"setup_bytes": setup, "recovery_bytes": recovery}
 
 
 def secagg_message_bytes(n_params: int, n_participants: int,

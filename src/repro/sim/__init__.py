@@ -1,0 +1,57 @@
+"""repro.sim — discrete-event multi-hospital simulator.
+
+Answers the systems questions the idealized ``repro.core.federation``
+runtimes cannot: simulated wall-clock under heterogeneous compute,
+bytes-on-wire per protocol, straggler sensitivity, and dropout recovery —
+while running the real training numerics, so utility/epsilon come out of the
+same run.  See DESIGN.md ("Discrete-event simulator") for the event model.
+"""
+
+from repro.sim.engine import (
+    ComputeDone,
+    EventEngine,
+    NodeDropout,
+    NodeRejoin,
+    TransferDone,
+)
+from repro.sim.nodes import (
+    HospitalNode,
+    heterogeneous_trace,
+    node_from_trace,
+    nodes_from_trace,
+)
+from repro.sim.protocols import (
+    ArmReport,
+    SIM_RUNNERS,
+    SimConfig,
+    scenario_from_trace,
+    simulate_decaph,
+    simulate_fl,
+    simulate_gossip,
+    simulate_local,
+    simulate_primia,
+)
+from repro.sim.topology import Link, Topology
+
+__all__ = [
+    "ArmReport",
+    "ComputeDone",
+    "EventEngine",
+    "HospitalNode",
+    "Link",
+    "NodeDropout",
+    "NodeRejoin",
+    "SIM_RUNNERS",
+    "SimConfig",
+    "Topology",
+    "TransferDone",
+    "heterogeneous_trace",
+    "node_from_trace",
+    "nodes_from_trace",
+    "scenario_from_trace",
+    "simulate_decaph",
+    "simulate_fl",
+    "simulate_gossip",
+    "simulate_local",
+    "simulate_primia",
+]

@@ -1,0 +1,170 @@
+"""Network topology: pairwise link bandwidth/latency between hospitals.
+
+Links are directed internally (stored per ordered pair) but all builders
+create symmetric graphs.  ``transfer_time`` is the latency + serialisation
+model ``lat + nbytes / bw`` — intentionally simple; contention-free links
+match the cross-silo setting (hospitals talk over independent WAN paths,
+not a shared fabric).
+
+Builders cover the paper-relevant shapes:
+
+  * ``full``      — every pair connected (DeCaPH's rotating leader can be
+                    anyone, so the mesh must be complete);
+  * ``star``      — all traffic through a hub (classic server-based FL);
+  * ``ring``      — minimal gossip graph;
+  * ``k_regular`` — circulant k-regular gossip graph (each node talks to
+                    its k nearest ring neighbours), the standard D-PSGD
+                    communication graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    bandwidth: float  # bytes per simulated second
+    latency: float = 0.0  # seconds
+
+    def __post_init__(self) -> None:
+        if self.bandwidth <= 0:
+            raise ValueError("bandwidth must be > 0")
+        if self.latency < 0:
+            raise ValueError("latency must be >= 0")
+
+
+_DEFAULT_LINK = Link(bandwidth=12.5e6, latency=0.02)  # ~100 Mbit/s WAN
+
+
+class Topology:
+    """Pairwise links over ``n`` hospitals."""
+
+    def __init__(
+        self,
+        n: int,
+        links: Mapping[tuple[int, int], Link],
+        *,
+        name: str = "custom",
+    ):
+        if n < 1:
+            raise ValueError("need at least one node")
+        self.n = n
+        self.name = name
+        self._links: dict[tuple[int, int], Link] = {}
+        for (i, j), link in links.items():
+            if not (0 <= i < n and 0 <= j < n) or i == j:
+                raise ValueError(f"bad edge ({i}, {j}) for n={n}")
+            self._links[(i, j)] = link
+
+    def has_edge(self, i: int, j: int) -> bool:
+        return (i, j) in self._links
+
+    def neighbors(self, i: int) -> list[int]:
+        return sorted(j for (a, j) in self._links if a == i)
+
+    def link(self, i: int, j: int) -> Link:
+        try:
+            return self._links[(i, j)]
+        except KeyError:
+            raise ValueError(
+                f"no {self.name} link {i} -> {j}; route through a neighbour"
+            ) from None
+
+    def transfer_time(self, i: int, j: int, nbytes: float) -> float:
+        """Seconds to move ``nbytes`` over the direct i -> j link."""
+        link = self.link(i, j)
+        return link.latency + nbytes / link.bandwidth
+
+    def degree(self, i: int) -> int:
+        return len(self.neighbors(i))
+
+    # -- builders -----------------------------------------------------------
+
+    @classmethod
+    def _symmetric(
+        cls, n: int, edges: Iterable[tuple[int, int]], link: Link, name: str
+    ) -> "Topology":
+        links: dict[tuple[int, int], Link] = {}
+        for i, j in edges:
+            links[(i, j)] = link
+            links[(j, i)] = link
+        return cls(n, links, name=name)
+
+    @classmethod
+    def full(cls, n: int, link: Link = _DEFAULT_LINK) -> "Topology":
+        return cls._symmetric(
+            n, ((i, j) for i in range(n) for j in range(i + 1, n)), link,
+            "full",
+        )
+
+    @classmethod
+    def star(cls, n: int, center: int = 0, link: Link = _DEFAULT_LINK) -> "Topology":
+        return cls._symmetric(
+            n, ((center, j) for j in range(n) if j != center), link, "star"
+        )
+
+    @classmethod
+    def ring(cls, n: int, link: Link = _DEFAULT_LINK) -> "Topology":
+        if n < 3:
+            return cls.full(n, link)
+        return cls._symmetric(
+            n, ((i, (i + 1) % n) for i in range(n)), link, "ring"
+        )
+
+    @classmethod
+    def k_regular(cls, n: int, k: int, link: Link = _DEFAULT_LINK) -> "Topology":
+        """Circulant graph: node i connects to i±1 .. i±(k//2) (mod n);
+        odd k on even n adds the antipodal edge i <-> i + n/2."""
+        if not 2 <= k < n:
+            raise ValueError(f"need 2 <= k < n, got k={k}, n={n}")
+        if k % 2 == 1 and n % 2 == 1:
+            raise ValueError("odd degree needs an even number of nodes")
+        edges = set()
+        for i in range(n):
+            for step in range(1, k // 2 + 1):
+                edges.add(tuple(sorted((i, (i + step) % n))))
+            if k % 2 == 1:
+                edges.add(tuple(sorted((i, (i + n // 2) % n))))
+        return cls._symmetric(n, edges, link, f"{k}-regular")
+
+    @classmethod
+    def from_trace(cls, trace: Mapping) -> "Topology":
+        """Build from a JSON-serialisable dict.
+
+        {"n": 5, "kind": "full" | "star" | "ring" | "k_regular",
+         "k": 2, "center": 0,
+         "default": {"bandwidth": 12.5e6, "latency": 0.02},
+         "links": {"0-1": {"bandwidth": 1e6, "latency": 0.1}, ...}}
+
+        ``links`` entries override the builder's default on both directions.
+        """
+        n = int(trace["n"])
+        default = trace.get("default")
+        link = (
+            Link(float(default["bandwidth"]), float(default.get("latency", 0.0)))
+            if default
+            else _DEFAULT_LINK
+        )
+        kind = trace.get("kind", "full")
+        if kind == "full":
+            topo = cls.full(n, link)
+        elif kind == "star":
+            topo = cls.star(n, int(trace.get("center", 0)), link)
+        elif kind == "ring":
+            topo = cls.ring(n, link)
+        elif kind == "k_regular":
+            topo = cls.k_regular(n, int(trace["k"]), link)
+        else:
+            raise ValueError(f"unknown topology kind {kind!r}")
+        for key, spec in (trace.get("links") or {}).items():
+            i, j = (int(x) for x in key.split("-"))
+            override = Link(
+                float(spec["bandwidth"]), float(spec.get("latency", 0.0))
+            )
+            if not topo.has_edge(i, j):
+                raise ValueError(f"override for absent edge {key!r}")
+            topo._links[(i, j)] = override
+            topo._links[(j, i)] = override
+        return topo

@@ -1,0 +1,98 @@
+"""`hypothesis` if installed, else a tiny deterministic fallback.
+
+The property tests are written against the real hypothesis API.  When the
+optional dependency is missing (the tier-1 container does not ship it), this
+shim runs each ``@given`` test on a fixed number of seeded pseudo-random
+draws instead — less coverage than hypothesis' shrinking search, but the
+properties still execute and the suite collects cleanly.  CI installs the
+real library (see .github/workflows/ci.yml), so full property testing runs
+there.
+
+Only the strategy surface the test files actually use is implemented:
+``integers``, ``floats``, ``sampled_from``, ``booleans``, ``none``,
+``one_of``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def none():
+            return _Strategy(lambda rng: None)
+
+        @staticmethod
+        def one_of(*strategies):
+            return _Strategy(
+                lambda rng: strategies[rng.randrange(len(strategies))].draw(rng)
+            )
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        """Record max_examples on whatever callable it decorates."""
+
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        """Run the test body on seeded draws from each keyword strategy."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples",
+                                    _DEFAULT_EXAMPLES))
+                for i in range(n):
+                    rng = random.Random(0xDECA9 + 31 * i)
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # pytest must not mistake the strategy kwargs for fixtures:
+            # hide the wrapped signature entirely.
+            del runner.__wrapped__
+            runner.__signature__ = inspect.Signature()
+            return runner
+
+        return deco

@@ -4,3 +4,6 @@ import sys
 # Tests see the normal single CPU device (the dry-run sets its own XLA_FLAGS
 # in a subprocess; never globally here).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# Make the vendored hypothesis shim (tests/_hyp.py) importable regardless of
+# pytest's rootdir/import mode.
+sys.path.insert(0, os.path.dirname(__file__))

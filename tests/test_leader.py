@@ -1,0 +1,72 @@
+"""leader_schedule: validity, determinism, long-run fairness per strategy."""
+
+import numpy as np
+import pytest
+
+from repro.core.leader import leader_load, leader_schedule
+
+STRATEGIES = ("uniform", "round_robin", "balanced")
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("n,rounds", [(1, 7), (3, 50), (8, 200)])
+def test_all_strategies_produce_valid_indices(strategy, n, rounds):
+    sched = leader_schedule(n, rounds, seed=5, strategy=strategy)
+    assert sched.shape == (rounds,)
+    assert sched.min() >= 0 and sched.max() < n
+    assert np.issubdtype(sched.dtype, np.integer)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_determinism_under_fixed_seed(strategy):
+    a = leader_schedule(6, 120, seed=42, strategy=strategy)
+    b = leader_schedule(6, 120, seed=42, strategy=strategy)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_uniform_seeds_differ():
+    a = leader_schedule(6, 120, seed=0)
+    b = leader_schedule(6, 120, seed=1)
+    assert (a != b).any()
+
+
+def test_round_robin_exact_rotation():
+    sched = leader_schedule(4, 10, strategy="round_robin")
+    np.testing.assert_array_equal(sched, [0, 1, 2, 3, 0, 1, 2, 3, 0, 1])
+    # perfectly fair up to remainder
+    load = leader_load(sched, 4)
+    assert load.max() - load.min() <= 1
+
+
+def test_balanced_is_exactly_fair_on_whole_permutations():
+    sched = leader_schedule(5, 5 * 40, seed=3, strategy="balanced")
+    assert (leader_load(sched, 5) == 40).all()
+    # and within one of fair on partial permutations
+    sched = leader_schedule(5, 5 * 40 + 3, seed=3, strategy="balanced")
+    load = leader_load(sched, 5)
+    assert load.max() - load.min() <= 1
+
+
+def test_uniform_fairness_over_many_rounds():
+    """i.i.d. uniform: every hospital leads close to rounds/n times."""
+    n, rounds = 5, 5000
+    load = leader_load(leader_schedule(n, rounds, seed=11), n)
+    expected = rounds / n
+    # 5-sigma binomial bound
+    sigma = np.sqrt(rounds * (1 / n) * (1 - 1 / n))
+    assert np.all(np.abs(load - expected) < 5 * sigma)
+
+
+def test_rejects_bad_arguments():
+    with pytest.raises(ValueError):
+        leader_schedule(0, 10)
+    with pytest.raises(ValueError):
+        leader_schedule(3, -1)
+    with pytest.raises(ValueError):
+        leader_schedule(3, 10, strategy="no_such_strategy")
+
+
+def test_zero_rounds_edge_case():
+    for strategy in STRATEGIES:
+        sched = leader_schedule(4, 0, strategy=strategy)
+        assert sched.shape == (0,)

@@ -1,0 +1,131 @@
+"""Dropout-robust SecAgg: Shamir algebra, DH agreement, mask recovery."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.secagg import (
+    DropoutRobustSession,
+    SecAggConfig,
+    secagg_recovery_bytes,
+    secure_sum,
+    secure_sum_with_dropouts,
+    shamir_reconstruct,
+    shamir_share,
+)
+
+
+def test_shamir_roundtrip_any_threshold_subset():
+    rng = np.random.default_rng(0)
+    secret = 987_654_321_012_345
+    shares = shamir_share(secret, n_shares=7, threshold=4, rng=rng)
+    assert shamir_reconstruct(shares[:4]) == secret
+    assert shamir_reconstruct(shares[3:7]) == secret
+    assert shamir_reconstruct([shares[0], shares[2], shares[4], shares[6]]) \
+        == secret
+    # fewer than threshold shares reconstruct garbage, not the secret
+    assert shamir_reconstruct(shares[:3]) != secret
+
+
+def test_shamir_validates_inputs():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        shamir_share(-1, 3, 2, rng)
+    with pytest.raises(ValueError):
+        shamir_share(5, 3, 4, rng)  # threshold > n_shares
+    with pytest.raises(ValueError):
+        shamir_reconstruct([])
+    with pytest.raises(ValueError):
+        shamir_reconstruct([(1, 5), (1, 6)])  # duplicate indices
+
+
+def test_dh_pair_seeds_are_symmetric():
+    cfg = SecAggConfig(4, seed=9)
+    sess = DropoutRobustSession(cfg, jnp.zeros((3,)))
+    for i in range(4):
+        for j in range(4):
+            if i != j:
+                assert sess._pair_seed(i, j) == sess._pair_seed(j, i)
+
+
+def test_no_dropout_equals_plain_secure_sum():
+    rng = np.random.default_rng(1)
+    n = 4
+    vals = [jnp.asarray(rng.normal(0, 2, 8).astype(np.float32))
+            for _ in range(n)]
+    cfg = SecAggConfig(n, frac_bits=16, seed=5)
+    out = secure_sum_with_dropouts(vals, cfg)
+    expected = np.sum([np.asarray(v) for v in vals], axis=0)
+    np.testing.assert_allclose(np.asarray(out), expected, atol=n * 2**-15)
+
+
+def test_dropout_recovery_equals_survivor_sum():
+    """The acceptance property: recovered aggregate == survivors' plain sum
+    within fixed-point tolerance."""
+    rng = np.random.default_rng(2)
+    n = 5
+    vals = [jnp.asarray(rng.normal(0, 3, 24).astype(np.float32))
+            for _ in range(n)]
+    cfg = SecAggConfig(n, frac_bits=16, seed=7)
+    for dropped in ({2}, {0, 4}, {1, 2}):
+        slots = [None if i in dropped else vals[i] for i in range(n)]
+        out = secure_sum_with_dropouts(slots, cfg, threshold=3)
+        expected = np.sum(
+            [np.asarray(vals[i]) for i in range(n) if i not in dropped],
+            axis=0,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), expected, atol=n * 2**-15
+        )
+
+
+def test_dropout_recovery_pytree():
+    tree_a = {"w": jnp.array([1.0, -2.0]), "b": {"c": jnp.array(0.5)}}
+    tree_b = {"w": jnp.array([3.0, 4.0]), "b": {"c": jnp.array(-1.5)}}
+    out = secure_sum_with_dropouts(
+        [tree_a, tree_b, None], SecAggConfig(3, seed=3), threshold=2
+    )
+    np.testing.assert_allclose(np.asarray(out["w"]), [4.0, 2.0], atol=1e-4)
+    np.testing.assert_allclose(float(out["b"]["c"]), -1.0, atol=1e-4)
+
+
+def test_below_threshold_aborts():
+    cfg = SecAggConfig(5, seed=0)
+    sess = DropoutRobustSession(cfg, jnp.zeros((4,)), threshold=4)
+    uploads = {i: sess.upload(i, jnp.ones((4,))) for i in range(3)}
+    with pytest.raises(ValueError, match="threshold"):
+        sess.aggregate(uploads)
+
+
+def test_upload_is_masked_and_validated():
+    cfg = SecAggConfig(3, seed=1)
+    sess = DropoutRobustSession(cfg, jnp.zeros((64,)))
+    up = sess.upload(0, jnp.ones((64,)))[0]
+    plain = np.round(np.ones(64) * cfg.scale).astype(np.uint32)
+    assert (up != plain).mean() > 0.9  # pads look uniform
+    with pytest.raises(ValueError):
+        sess.upload(0, jnp.ones((65,)))  # wrong shape fails loudly
+
+
+def test_secure_sum_fails_loudly_on_short_lists():
+    """Satellite: a dropped participant must never yield silent garbage."""
+    vals = [jnp.ones((4,)), jnp.ones((4,))]
+    with pytest.raises(ValueError, match="participants"):
+        secure_sum(vals, SecAggConfig(3, seed=0))
+    with pytest.raises(ValueError, match="empty"):
+        secure_sum([], SecAggConfig(0, seed=0))
+
+
+def test_all_dropped_rejected():
+    with pytest.raises(ValueError, match="every participant"):
+        secure_sum_with_dropouts([None, None], SecAggConfig(2, seed=0))
+
+
+def test_recovery_cost_model_shape():
+    c0 = secagg_recovery_bytes(8, 0)
+    c2 = secagg_recovery_bytes(8, 2)
+    assert c0["recovery_bytes"] == 0.0
+    assert c2["recovery_bytes"] > 0.0
+    assert c2["setup_bytes"] == c0["setup_bytes"]  # setup paid up front
+    assert secagg_recovery_bytes(16)["setup_bytes"] \
+        > 3 * secagg_recovery_bytes(8)["setup_bytes"]  # ~quadratic in n

@@ -1,0 +1,265 @@
+"""Discrete-event simulator: engine semantics, topologies, protocol arms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dp import DPConfig
+from repro.core.federation import Model, Participant
+from repro.sim import (
+    ComputeDone,
+    EventEngine,
+    NodeDropout,
+    NodeRejoin,
+    SimConfig,
+    Topology,
+    TransferDone,
+    heterogeneous_trace,
+    nodes_from_trace,
+    scenario_from_trace,
+    simulate_decaph,
+    simulate_fl,
+    simulate_gossip,
+    simulate_local,
+    simulate_primia,
+)
+
+# -- engine -----------------------------------------------------------------
+
+
+def test_engine_pops_in_time_order_fifo_ties():
+    eng = EventEngine()
+    eng.schedule(2.0, ComputeDone(0, tag="late"))
+    eng.schedule(1.0, ComputeDone(1, tag="early"))
+    eng.schedule(1.0, ComputeDone(2, tag="early2"))  # same time: FIFO
+    order = [ev.node for ev in eng.drain()]
+    assert order == [1, 2, 0]
+    assert eng.now == 2.0
+
+
+def test_engine_cancel_and_negative_delay():
+    eng = EventEngine()
+    h = eng.schedule(1.0, ComputeDone(0))
+    eng.schedule(2.0, ComputeDone(1))
+    eng.cancel(h)
+    assert [ev.node for ev in eng.drain()] == [1]
+    with pytest.raises(ValueError):
+        eng.schedule(-0.1, ComputeDone(0))
+    with pytest.raises(ValueError):
+        eng.schedule_at(eng.now - 1.0, ComputeDone(0))
+
+
+def test_engine_run_until_and_pending_kinds():
+    eng = EventEngine()
+    eng.schedule(1.0, NodeDropout(0))
+    eng.schedule(5.0, NodeRejoin(0))
+    seen = []
+    n = eng.run(seen.append, until=2.0)
+    assert n == 1 and isinstance(seen[0], NodeDropout)
+    assert eng.now == 2.0  # clock advanced to the horizon
+    assert eng.pending_kinds() == {NodeRejoin}
+
+
+# -- topology ---------------------------------------------------------------
+
+
+def test_topology_builders_shapes():
+    star = Topology.star(5, center=0)
+    assert star.degree(0) == 4 and all(star.degree(j) == 1 for j in range(1, 5))
+    ring = Topology.ring(6)
+    assert all(ring.degree(i) == 2 for i in range(6))
+    reg = Topology.k_regular(6, 4)
+    assert all(reg.degree(i) == 4 for i in range(6))
+    full = Topology.full(4)
+    assert all(full.degree(i) == 3 for i in range(4))
+    with pytest.raises(ValueError):
+        Topology.k_regular(5, 3)  # odd degree on odd n is impossible
+
+
+def test_transfer_time_and_missing_link():
+    topo = Topology.from_trace({
+        "n": 3, "kind": "star", "center": 0,
+        "default": {"bandwidth": 1e6, "latency": 0.5},
+        "links": {"0-2": {"bandwidth": 2e6, "latency": 0.25}},
+    })
+    assert topo.transfer_time(0, 1, 1e6) == pytest.approx(1.5)
+    assert topo.transfer_time(2, 0, 1e6) == pytest.approx(0.75)  # override
+    with pytest.raises(ValueError):
+        topo.transfer_time(1, 2, 100.0)  # leaves don't talk directly
+
+
+def test_nodes_from_trace_validates():
+    nodes = nodes_from_trace(heterogeneous_trace(4))
+    assert len(nodes) == 4
+    assert nodes[0].throughput > nodes[3].throughput  # straggler is last
+    assert nodes[1].compute_time(100) > nodes[0].compute_time(100)
+    with pytest.raises(ValueError):
+        nodes_from_trace([{"throughput": 0.0}])
+    with pytest.raises(ValueError):
+        nodes_from_trace([{"throughput": 10.0, "dropouts": [[5.0, 1.0]]}])
+
+
+# -- protocol arms ----------------------------------------------------------
+
+
+def _make_model(d):
+    def init_fn(key):
+        return {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
+
+    def loss(params, ex):
+        logit = ex["x"] @ params["w"] + params["b"]
+        y = ex["y"]
+        return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+    def predict(params, x):
+        return jax.nn.sigmoid(x @ params["w"] + params["b"])
+
+    return Model(init_fn, loss, predict)
+
+
+def _silos(seed=0, sizes=(150, 110, 90, 70, 60)):
+    rng = np.random.default_rng(seed)
+    w_true = np.array([1.5, -2.0, 1.0, 0.0, 0.5])
+    out = []
+    for i, n in enumerate(sizes):
+        x = rng.normal(0.1 * i, 1.0, (n, 5)).astype(np.float32)
+        y = (x @ w_true + rng.normal(0, 0.2, n) > 0).astype(np.float32)
+        out.append(Participant(x, y))
+    return out
+
+
+def _acc(model, params, silos):
+    x = np.concatenate([p.x for p in silos])
+    y = np.concatenate([p.y for p in silos])
+    return ((np.asarray(model.predict_fn(params, jnp.asarray(x))) > 0.5)
+            == y).mean()
+
+
+def _cfg(**kw):
+    base = dict(
+        rounds=8, batch_size=48, lr=0.5, seed=0,
+        dp=DPConfig(clip_norm=1.0, noise_multiplier=0.6, microbatch_size=8),
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def test_decaph_sim_learns_and_reports_systems_metrics():
+    silos = _silos()
+    model = _make_model(5)
+    rep = simulate_decaph(model, silos, nodes_from_trace(heterogeneous_trace(5)),
+                          Topology.full(5), _cfg())
+    assert rep.rounds_completed == 8
+    assert rep.wall_clock > 0 and rep.bytes_on_wire > 0
+    assert rep.epsilon > 0
+    assert _acc(model, rep.params, silos) > 0.8
+
+
+def test_decaph_sim_dropout_triggers_shamir_recovery():
+    silos = _silos()
+    model = _make_model(5)
+    trace = heterogeneous_trace(5)
+    trace[2]["dropouts"] = [[0.2, None]]  # drops mid-run, never returns
+    rep = simulate_decaph(model, silos, nodes_from_trace(trace),
+                          Topology.full(5), _cfg())
+    assert rep.dropout_events == 1
+    assert rep.recoveries >= 1          # the mid-round drop was recovered
+    assert rep.rounds_completed >= 6    # training continued with survivors
+    assert _acc(model, rep.params, silos) > 0.75
+
+
+def test_straggler_dominates_sync_wall_clock():
+    """Same workload, one 20x-slower hospital => wall-clock inflates."""
+    silos = _silos()
+    model = _make_model(5)
+    fast = [{"throughput": 500.0} for _ in range(5)]
+    slow = [dict(t) for t in fast]
+    slow[4] = {"throughput": 25.0}
+    r_fast = simulate_fl(model, silos, nodes_from_trace(fast),
+                         Topology.star(5), _cfg())
+    r_slow = simulate_fl(model, silos, nodes_from_trace(slow),
+                         Topology.star(5), _cfg())
+    assert r_slow.wall_clock > 2.0 * r_fast.wall_clock
+
+
+def test_fl_and_primia_sim_run_star():
+    silos = _silos()
+    model = _make_model(5)
+    rep = simulate_fl(model, silos, nodes_from_trace(heterogeneous_trace(5)),
+                      Topology.star(5), _cfg())
+    assert rep.epsilon == 0.0 and rep.rounds_completed == 8
+    assert _acc(model, rep.params, silos) > 0.8
+    rep = simulate_primia(model, silos,
+                          nodes_from_trace(heterogeneous_trace(5)),
+                          Topology.star(5), _cfg())
+    assert rep.epsilon > 0 and rep.rounds_completed >= 1
+
+
+def test_fl_stalls_when_hub_dies():
+    """Server-based FL has a single point of failure; the sim must show it."""
+    silos = _silos()
+    model = _make_model(5)
+    trace = heterogeneous_trace(5)
+    trace[0]["dropouts"] = [[0.1, None]]  # the hub (fl_server=0) dies early
+    rep = simulate_fl(model, silos, nodes_from_trace(trace),
+                      Topology.star(5), _cfg())
+    assert rep.rounds_completed <= 1  # nothing aggregates at a dead hub
+    # decaph's rotating facilitator survives the same failure
+    rep2 = simulate_decaph(model, silos, nodes_from_trace(trace),
+                           Topology.full(5), _cfg())
+    assert rep2.rounds_completed >= 6
+
+
+def test_local_sim_no_bytes_and_dropout_stalls():
+    silos = _silos()
+    model = _make_model(5)
+    rep = simulate_local(model, silos,
+                         nodes_from_trace(heterogeneous_trace(5)),
+                         Topology.full(5), _cfg())
+    assert rep.bytes_on_wire == 0.0
+    assert len(rep.per_node_params) == 5
+    # an offline window on the straggler stretches its wall-clock
+    trace = heterogeneous_trace(5)
+    trace[4]["dropouts"] = [[0.1, 30.0]]
+    rep2 = simulate_local(model, silos, nodes_from_trace(trace),
+                          Topology.full(5), _cfg())
+    assert rep2.wall_clock > rep.wall_clock + 25.0
+
+
+def test_gossip_sim_learns_and_reaches_rough_consensus():
+    silos = _silos()
+    model = _make_model(5)
+    rep = simulate_gossip(model, silos,
+                          nodes_from_trace(heterogeneous_trace(5)),
+                          Topology.k_regular(5, 2), _cfg(rounds=12))
+    assert rep.rounds_completed == 12   # every node finished its steps
+    assert rep.bytes_on_wire > 0
+    assert _acc(model, rep.params, silos) > 0.8
+    # pairwise averaging keeps nodes near the consensus model
+    w_avg = np.asarray(rep.params["w"])
+    for p in rep.per_node_params:
+        assert np.linalg.norm(np.asarray(p["w"]) - w_avg) < 2.0
+
+
+def test_gossip_survives_permanent_dropout():
+    silos = _silos()
+    model = _make_model(5)
+    trace = heterogeneous_trace(5)
+    trace[1]["dropouts"] = [[0.05, None]]
+    rep = simulate_gossip(model, silos, nodes_from_trace(trace),
+                          Topology.ring(5), _cfg(rounds=6))
+    assert rep.dropout_events == 1
+    # the dead node froze early; the others finished their steps
+    assert rep.rounds_completed < 6
+    assert _acc(model, rep.params, silos) > 0.6
+
+
+def test_scenario_from_trace_roundtrip():
+    nodes, topo = scenario_from_trace({
+        "nodes": heterogeneous_trace(4),
+        "topology": {"kind": "ring"},
+    })
+    assert len(nodes) == 4 and topo.n == 4
+    assert all(topo.degree(i) == 2 for i in range(4))
