@@ -8,15 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.arms as arms
 from repro.core.dp import DPConfig
-from repro.core.federation import (
-    FederationConfig,
-    normalize_participants,
-    run_decaph,
-    run_fl,
-    run_local,
-    run_primia,
-)
 from repro.core.mia import auroc
 from repro.data.partition import train_test_split_silos
 
@@ -29,36 +22,32 @@ def timed(fn, *args, **kw):
 
 def utility_comparison(model, silos, *, rounds, batch, lr, sigma, clip,
                        eps_budget, seed=0, microbatch=16):
-    """Run the paper's four arms and return test metrics for each.
+    """Run the paper's four arms (via the arm registry) and return test
+    metrics for each.
 
     sigma=None self-calibrates the noise multiplier so the DP arms can use
     all ``rounds`` within ``eps_budget`` (the paper: "carefully calibrating
     the privacy-related hyperparameters").
     """
-    silos = normalize_participants(silos)
+    silos = arms.normalize_participants(silos)
     train, tx, ty = train_test_split_silos(silos, 0.2, seed=seed)
     if sigma is None:
         from repro.core.accountant import sigma_for_epsilon
 
         rate = batch / sum(len(p) for p in train)
         sigma = sigma_for_epsilon(rate, rounds, eps_budget, 1e-5)
-    cfg = FederationConfig(
+    cfg = arms.ArmConfig(
         rounds=rounds, batch_size=batch, lr=lr, seed=seed, use_secagg=False,
         dp=DPConfig(clip_norm=clip, noise_multiplier=sigma,
                     microbatch_size=microbatch),
         epsilon_budget=eps_budget,
     )
     out = {}
-    res_fl, t_fl = timed(run_fl, model, train, cfg)
-    out["fl"] = (res_fl.params, 0.0, t_fl / max(res_fl.rounds_completed, 1))
-    res_dc, t_dc = timed(run_decaph, model, train, cfg)
-    out["decaph"] = (res_dc.params, res_dc.epsilon,
-                     t_dc / max(res_dc.rounds_completed, 1))
-    res_pm, t_pm = timed(run_primia, model, train, cfg)
-    out["primia"] = (res_pm.params, res_pm.epsilon,
-                     t_pm / max(res_pm.rounds_completed, 1))
-    res_lo, t_lo = timed(run_local, model, train, cfg)
-    out["local"] = (res_lo.per_client_params, 0.0, t_lo / rounds)
+    for arm in ("fl", "decaph", "primia", "local"):
+        res, t_us = timed(arms.run, arm, model, train, cfg)
+        params = res.per_node_params if arm == "local" else res.params
+        out[arm] = (params, res.epsilon,
+                    t_us / max(res.rounds_completed, 1))
     return out, tx, ty
 
 

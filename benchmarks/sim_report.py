@@ -1,9 +1,11 @@
-"""Systems report: all five arms on a 5-hospital heterogeneous trace.
+"""Systems report: every registered arm on a 5-hospital heterogeneous trace.
 
-For each arm (decaph, fl, primia, local, gossip) the simulator reports
-simulated wall-clock, bytes-on-wire, rounds completed, epsilon and final
-utility — answering the deployment questions (stragglers, flaky networks,
-dropout) the idealized ``repro.core.federation`` runtimes cannot.
+For each arm in the registry (decaph, fl, primia, local, gossip, gossip-dp)
+the sim backend reports simulated wall-clock, bytes-on-wire, rounds
+completed, epsilon and final utility — answering the deployment questions
+(stragglers, flaky networks, dropout) the idealized backend cannot.  The
+table enumerates ``repro.arms.names()``, so a newly registered arm shows up
+here without touching this file.
 
 Also certifies the dropout-recovery acceptance property end to end: a
 hospital dropping mid-round on the decaph arm completes via Shamir mask
@@ -19,21 +21,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.arms as arms
 from repro.core.dp import DPConfig
-from repro.core.federation import Model, normalize_participants
 from repro.core.secagg import DropoutRobustSession, SecAggConfig
 from repro.data.synthetic import make_gemini_like
-from repro.sim import (
-    SimConfig,
-    Topology,
-    nodes_from_trace,
-    scenario_from_trace,
-    simulate_decaph,
-    simulate_fl,
-    simulate_gossip,
-    simulate_local,
-    simulate_primia,
-)
+from repro.run import linear_model, pooled_accuracy
+from repro.sim import Topology, nodes_from_trace
 
 # A 5-hospital cohort: a fast research centre down to a community-hospital
 # straggler (examples/sec), with the straggler also on the slowest WAN link.
@@ -55,29 +48,17 @@ SCENARIO = {
 }
 
 
-def _linear_model(d: int) -> Model:
-    def init_fn(key):
-        return {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
-
-    def loss(params, ex):
-        logit = ex["x"] @ params["w"] + params["b"]
-        y = ex["y"]
-        return jnp.mean(
-            jnp.maximum(logit, 0) - logit * y
-            + jnp.log1p(jnp.exp(-jnp.abs(logit)))
-        )
-
-    def predict(params, x):
-        return jax.nn.sigmoid(x @ params["w"] + params["b"])
-
-    return Model(init_fn, loss, predict)
-
-
-def _accuracy(model, params, silos) -> float:
-    x = np.concatenate([p.x for p in silos])
-    y = np.concatenate([p.y for p in silos])
-    pred = np.asarray(model.predict_fn(params, jnp.asarray(x))) > 0.5
-    return float((pred == y).mean())
+def _topology_for(arm_cls, n: int, center: int) -> Topology:
+    """The arm's natural topology, carrying the scenario's link model."""
+    default = SCENARIO["topology"]["default"]
+    if arm_cls.topology_kind == "star":
+        spec = {"kind": "star", "center": center, "default": default}
+    elif arm_cls.topology_kind == "ring":
+        spec = {"kind": "ring", "default": default}
+    else:
+        spec = dict(SCENARIO["topology"])  # full mesh incl. slow-WAN links
+    spec.setdefault("n", n)
+    return Topology.from_trace(spec)
 
 
 def certify_dropout_recovery(
@@ -107,12 +88,12 @@ def certify_dropout_recovery(
 def run(fast: bool = True) -> list[dict]:
     n_features = 32 if fast else 436
     rounds = 12 if fast else 60
-    silos = normalize_participants(
+    silos = arms.normalize_participants(
         make_gemini_like(seed=0, n_total=1200 if fast else 5000,
                          n_silos=5, n_features=n_features)
     )
-    model = _linear_model(n_features)
-    cfg = SimConfig(
+    model = linear_model(n_features)
+    cfg = arms.ArmConfig(
         rounds=rounds, batch_size=64, lr=0.4, seed=0,
         dp=DPConfig(clip_norm=1.0, noise_multiplier=0.8, microbatch_size=8),
     )
@@ -125,25 +106,15 @@ def run(fast: bool = True) -> list[dict]:
         "derived": f"max_abs_err={err:.2e};survivors=3of5;threshold=3",
     })
 
-    arms = {
-        "decaph": (simulate_decaph, SCENARIO["topology"]),
-        "fl": (simulate_fl, {"kind": "star", "center": cfg.fl_server,
-                             "default": SCENARIO["topology"]["default"]}),
-        "primia": (simulate_primia, {"kind": "star", "center": cfg.fl_server,
-                                     "default": SCENARIO["topology"]["default"]}),
-        "local": (simulate_local, {"kind": "full"}),
-        "gossip": (simulate_gossip, {"kind": "ring",
-                                     "default": SCENARIO["topology"]["default"]}),
-    }
-    for arm, (runner, topo_spec) in arms.items():
-        nodes, _ = scenario_from_trace(SCENARIO)
-        topo_spec = dict(topo_spec)
-        topo_spec.setdefault("n", len(nodes))
-        topo = Topology.from_trace(topo_spec)
+    for arm in arms.names():
+        arm_cls = arms.get(arm)
+        nodes = nodes_from_trace(SCENARIO["nodes"])
+        topo = _topology_for(arm_cls, len(nodes), cfg.fl_server)
         t0 = time.time()
-        rep = runner(model, silos, nodes, topo, cfg)
+        rep = arms.run(arm, model, silos, cfg, backend="sim",
+                       nodes=nodes, topo=topo)
         elapsed_us = (time.time() - t0) * 1e6
-        acc = _accuracy(
+        acc = pooled_accuracy(
             model,
             rep.per_node_params[0] if arm == "local" else rep.params,
             silos,
@@ -171,7 +142,7 @@ def run(fast: bool = True) -> list[dict]:
 
 
 if __name__ == "__main__":
-    header = (f"{'arm':<8} {'sim wall (s)':>12} {'bytes on wire':>14} "
+    header = (f"{'arm':<10} {'sim wall (s)':>12} {'bytes on wire':>14} "
               f"{'rounds':>6} {'epsilon':>8} {'accuracy':>8} {'recov':>5}")
     rows = run(fast=True)
     print(header)
@@ -182,7 +153,7 @@ if __name__ == "__main__":
             print(f"dropout recovery certified: max_abs_err={d['max_abs_err']}"
                   f" ({d['survivors']} survivors, threshold={d['threshold']})")
             continue
-        print(f"{r['name'][4:]:<8} {float(d['sim_wall_clock_s']):>12.3f} "
+        print(f"{r['name'][4:]:<10} {float(d['sim_wall_clock_s']):>12.3f} "
               f"{float(d['bytes_on_wire']):>14.0f} {d['rounds']:>6} "
               f"{float(d['epsilon']):>8.2f} {float(d['accuracy']):>8.3f} "
               f"{d.get('recoveries', '0'):>5}")

@@ -1,11 +1,12 @@
 """Heterogeneous hospitals: what deployment actually costs.
 
 Five hospitals with a 8x compute spread and a flaky mid-tier site that
-drops off the network mid-training and rejoins.  The discrete-event
-simulator (``repro.sim``) replays DeCaPH and the async-gossip D-PSGD arm
-under these conditions and reports what the idealized runtime cannot:
-simulated wall-clock, bytes on wire, and a real Shamir mask recovery when
-the dropout lands mid-round.
+drops off the network mid-training and rejoins.  Each protocol is written
+ONCE as a registered arm (``repro.arms``); here the discrete-event backend
+replays DeCaPH, async-gossip D-PSGD, and the local-DP gossip variant under
+these conditions and reports what the idealized backend cannot: simulated
+wall-clock, bytes on wire, and a real Shamir mask recovery when the dropout
+lands mid-round.
 
 Run:  PYTHONPATH=src python examples/heterogeneous_hospitals.py
 """
@@ -14,20 +15,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.arms as arms
 from repro.core.dp import DPConfig
-from repro.core.federation import Model, normalize_participants
 from repro.data import make_gemini_like
-from repro.sim import (
-    SimConfig,
-    Topology,
-    nodes_from_trace,
-    simulate_decaph,
-    simulate_gossip,
-)
+from repro.sim import Topology, nodes_from_trace
 
 
 def main() -> None:
-    silos = normalize_participants(
+    silos = arms.normalize_participants(
         make_gemini_like(seed=0, n_total=1500, n_silos=5, n_features=32)
     )
 
@@ -43,7 +38,7 @@ def main() -> None:
     def predict(params, x):
         return jax.nn.sigmoid(x @ params["w"] + params["b"])
 
-    model = Model(init_fn, loss, predict)
+    model = arms.Model(init_fn, loss, predict)
 
     # Research centre (500 ex/s) down to community hospital (60 ex/s);
     # hospital 3 loses connectivity at t=0.3s and rejoins at t=2.0s.
@@ -54,7 +49,7 @@ def main() -> None:
         {"throughput": 110.0, "overhead": 0.04, "dropouts": [[0.3, 2.0]]},
         {"throughput": 60.0, "overhead": 0.05},
     ]
-    cfg = SimConfig(
+    cfg = arms.ArmConfig(
         rounds=15, batch_size=64, lr=0.4, seed=0,
         dp=DPConfig(clip_norm=1.0, noise_multiplier=0.8, microbatch_size=8),
     )
@@ -65,9 +60,8 @@ def main() -> None:
         return ((np.asarray(model.predict_fn(params, jnp.asarray(x))) > 0.5)
                 == y).mean()
 
-    dec = simulate_decaph(
-        model, silos, nodes_from_trace(trace), Topology.full(5), cfg
-    )
+    dec = arms.run("decaph", model, silos, cfg, backend="sim",
+                   nodes=nodes_from_trace(trace), topo=Topology.full(5))
     print("DeCaPH (synchronous rounds, dropout-robust SecAgg)")
     print(f"  simulated wall-clock : {dec.wall_clock:.2f} s")
     print(f"  bytes on wire        : {dec.bytes_on_wire:,.0f}")
@@ -76,9 +70,8 @@ def main() -> None:
     print(f"  epsilon spent        : {dec.epsilon:.2f}")
     print(f"  pooled accuracy      : {accuracy(dec.params):.3f}")
 
-    gos = simulate_gossip(
-        model, silos, nodes_from_trace(trace), Topology.k_regular(5, 2), cfg
-    )
+    gos = arms.run("gossip", model, silos, cfg, backend="sim",
+                   nodes=nodes_from_trace(trace), topo=Topology.k_regular(5, 2))
     print("\nAsync gossip D-PSGD (no rounds, 2-regular graph)")
     print(f"  simulated wall-clock : {gos.wall_clock:.2f} s "
           f"(straggler-paced, but compute overlaps communication)")
@@ -89,6 +82,19 @@ def main() -> None:
               for p in gos.per_node_params]
     print(f"  model disagreement   : max |w_i - w_avg| = {max(spread):.4f} "
           f"(gossip keeps nodes approximately synced)")
+
+    # The same numerics as "gossip" plus local clip+noise and a per-node
+    # accountant — registered once, both backends for free (ROADMAP item).
+    gdp = arms.run("gossip-dp", model, silos, cfg, backend="sim",
+                   nodes=nodes_from_trace(trace), topo=Topology.k_regular(5, 2))
+    print("\nDP gossip (local clip+noise, per-node accountants)")
+    print(f"  simulated wall-clock : {gdp.wall_clock:.2f} s")
+    print(f"  bytes on wire        : {gdp.bytes_on_wire:,.0f}")
+    print(f"  epsilon spent (max)  : {gdp.epsilon:.2f}  "
+          f"(vs DeCaPH's {dec.epsilon:.2f} for the same rounds)")
+    print(f"  consensus accuracy   : {accuracy(gdp.params):.3f}  "
+          f"(the local-DP utility tax relative to gossip's "
+          f"{accuracy(gos.params):.3f})")
 
 
 if __name__ == "__main__":

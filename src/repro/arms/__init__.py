@@ -1,0 +1,105 @@
+"""repro.arms — write each federation arm once, run it on any backend.
+
+The unified Arm/Backend API (DESIGN.md §5): an ``Arm`` declares a protocol's
+per-round numerics (local update, aggregation, accounting, what goes on the
+wire) with no notion of time; the backends execute it either idealized
+(``LocalRunner`` — the paper's utility experiments) or under simulated time
+(``SimRunner`` — wall-clock, bytes-on-wire, stragglers, dropout recovery).
+
+    import repro.arms as arms
+    report = arms.run("decaph", model, silos, arms.ArmConfig(rounds=20))
+    timed  = arms.run("decaph", model, silos, cfg, backend="sim",
+                      nodes=nodes, topo=topo)
+
+Registered arms: decaph, fl (FedSGD/FedAvg), primia (local-DP FL), local
+(silo-only), gossip (async D-PSGD), gossip-dp (local-DP D-PSGD).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.arms.base import (
+    AggregationServices,
+    Arm,
+    ArmConfig,
+    Contribution,
+    Model,
+    NodeArm,
+    Participant,
+    RoundArm,
+    RoundOutcome,
+    normalize_participants,
+    poisson_batch,
+    sgd_update,
+    tree_bytes,
+    tree_sum,
+)
+from repro.arms.registry import get, names, register
+from repro.arms.results import RoundLog, RunReport, SimTiming
+from repro.arms.runners import LocalRunner, SimRunner, default_topology
+
+# importing the arm modules is what registers them
+from repro.arms import decaph as _decaph          # noqa: F401
+from repro.arms import fl as _fl                  # noqa: F401
+from repro.arms import gossip as _gossip          # noqa: F401
+from repro.arms import gossip_dp as _gossip_dp    # noqa: F401
+from repro.arms import local as _local            # noqa: F401
+from repro.arms import primia as _primia          # noqa: F401
+
+
+def run(
+    name: str,
+    model: Model,
+    participants: Sequence[Participant],
+    cfg: ArmConfig,
+    *,
+    backend: str = "ideal",
+    nodes=None,
+    topo=None,
+) -> RunReport:
+    """Instantiate arm ``name`` and execute it on the chosen backend.
+
+    ``backend="ideal"`` ignores ``nodes`` (everyone is infinitely fast);
+    ``backend="sim"`` requires ``nodes`` (one ``HospitalNode`` per
+    participant).  ``topo`` defaults to the arm's natural topology.
+    """
+    arm = get(name)(model, participants, cfg)
+    if backend == "ideal":
+        return LocalRunner(topo=topo).run(arm)
+    if backend == "sim":
+        if nodes is None:
+            raise ValueError("backend='sim' needs nodes= (HospitalNode list)")
+        if topo is None:
+            topo = default_topology(arm.topology_kind, len(nodes),
+                                    cfg.fl_server)
+        return SimRunner(nodes, topo).run(arm)
+    raise ValueError(f"unknown backend {backend!r}; use 'ideal' or 'sim'")
+
+
+__all__ = [
+    "AggregationServices",
+    "Arm",
+    "ArmConfig",
+    "Contribution",
+    "LocalRunner",
+    "Model",
+    "NodeArm",
+    "Participant",
+    "RoundArm",
+    "RoundLog",
+    "RoundOutcome",
+    "RunReport",
+    "SimRunner",
+    "SimTiming",
+    "default_topology",
+    "get",
+    "names",
+    "normalize_participants",
+    "poisson_batch",
+    "register",
+    "run",
+    "sgd_update",
+    "tree_bytes",
+    "tree_sum",
+]

@@ -1,0 +1,143 @@
+"""DeCaPH — the paper's framework, Steps 1-7, as a registered arm.
+
+Shared Poisson rate, per-example clipping, per-participant noise shares
+sized so the secure **sum** carries N(0, (C sigma)^2), SecAgg aggregation,
+rotating facilitator, one shared RDP accountant over the aggregate dataset.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+
+from repro.arms.base import (
+    AggregationServices,
+    ArmConfig,
+    Contribution,
+    Model,
+    Participant,
+    RoundArm,
+    RoundOutcome,
+    default_pad,
+    poisson_batch,
+    sgd_update,
+    tree_div,
+)
+from repro.arms.registry import register
+from repro.core import dp as dp_lib
+from repro.core.accountant import RDPAccountant, steps_for_epsilon
+from repro.core.leader import leader_schedule
+
+_NOISE_SALT = 17  # legacy key derivation: fold_in(fold_in(key, 17 + t), i)
+
+
+@register("decaph")
+class DeCaPHArm(RoundArm):
+    """The DeCaPH protocol (distributed-noise DP-SGD behind SecAgg)."""
+
+    private = True
+    secure_uploads = True
+    void_logs = True            # an empty Poisson round is logged as NaN
+    topology_kind = "full"      # any participant can facilitate
+
+    def __init__(self, model: Model, participants: Sequence[Participant],
+                 cfg: ArmConfig) -> None:
+        super().__init__(model, participants, cfg)
+        n_total = sum(len(p) for p in self.participants)
+        self.rate = cfg.batch_size / n_total
+        self.pad = default_pad(self.rate, self.participants, cfg)
+        self.leaders = leader_schedule(
+            self.h, cfg.rounds, seed=cfg.seed, strategy=cfg.leader_strategy
+        )
+        self.acct = RDPAccountant(
+            sampling_rate=self.rate,
+            noise_multiplier=cfg.dp.noise_multiplier,
+            delta=cfg.dp.delta,
+        )
+        self._key = jax.random.key(cfg.seed)
+        self._clipped_sum = jax.jit(
+            lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
+                model.loss_fn, p, b,
+                clip_norm=cfg.dp.clip_norm,
+                microbatch_size=min(cfg.dp.microbatch_size, self.pad),
+                mask=m,
+            )
+        )
+
+    # --- schedule -------------------------------------------------------------
+
+    def planned_rounds(self) -> int:
+        if self.cfg.epsilon_budget is None:
+            return self.cfg.rounds
+        return min(
+            self.cfg.rounds,
+            steps_for_epsilon(
+                self.rate, self.cfg.dp.noise_multiplier,
+                self.cfg.epsilon_budget, self.cfg.dp.delta,
+                max_steps=self.cfg.rounds + 1,
+            ),
+        )
+
+    def quorum(self) -> tuple[int, int | None]:
+        # Running below the configured reconstruction threshold would
+        # silently weaken the operator's security choice.
+        if self.cfg.use_secagg:
+            return max(2, self.cfg.secagg_threshold or 2), None
+        return 2, None
+
+    def facilitator(self, t: int, active: Sequence[int]) -> int:
+        leader = int(self.leaders[t])
+        if leader in active:
+            return leader
+        # shared-seed schedule: everyone deterministically skips to the
+        # next online hospital
+        return active[t % len(active)]
+
+    # --- numerics ---------------------------------------------------------------
+
+    def contribution(self, params, i, t, rng, n_shares):
+        b, m, k = poisson_batch(rng, self.participants[i], self.rate, self.pad)
+        g_sum, loss = self._clipped_sum(params, b, jax.numpy.asarray(m))
+        nkey = jax.random.fold_in(
+            jax.random.fold_in(self._key, _NOISE_SALT + t), i
+        )
+        noised = dp_lib.tree_add_noise(
+            g_sum, nkey, clip_norm=self.cfg.dp.clip_norm,
+            noise_multiplier=self.cfg.dp.noise_multiplier, n_shares=n_shares,
+        )
+        return Contribution(payload=noised, size=k, loss=float(loss))
+
+    def aggregate(
+        self,
+        params,
+        contributions: Mapping[int, Contribution],
+        services: AggregationServices,
+    ) -> RoundOutcome:
+        order = sorted(contributions)
+        agg_batch = services.sum_sizes([contributions[i].size for i in order])
+        if agg_batch == 0:
+            return RoundOutcome(params, stepped=False)
+        total = services.sum_payloads(
+            {i: contributions[i].payload for i in order}
+        )
+        grad = tree_div(total, agg_batch)
+        params = sgd_update(params, grad, self.cfg.lr, self.cfg.weight_decay)
+        loss = float(np.mean([contributions[i].loss for i in order]))
+        return RoundOutcome(params, stepped=True, loss=loss,
+                            aggregate_batch=agg_batch)
+
+    # --- accounting -------------------------------------------------------------
+
+    def account(self) -> None:
+        self.acct.step()
+
+    def epsilon(self) -> float:
+        return self.acct.epsilon()
+
+    def should_stop(self) -> bool:
+        return (
+            self.cfg.epsilon_budget is not None
+            and self.acct.exceeds(self.cfg.epsilon_budget)
+        )

@@ -1,0 +1,106 @@
+"""FL — the paper's non-private comparison arm (FedSGD / FedAvg).
+
+``fl_local_steps == 1`` is FedSGD with DeCaPH's sampling/sync cadence (the
+paper's FL arm; SL is equivalent for utility); ``> 1`` is FedAvg (McMahan et
+al.): each client takes k local SGD steps per round and the server
+size-weights the resulting weights.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.arms.base import (
+    AggregationServices,
+    ArmConfig,
+    Contribution,
+    Model,
+    Participant,
+    RoundArm,
+    RoundOutcome,
+    default_pad,
+    poisson_batch,
+    sgd_update,
+    tree_div,
+)
+from repro.arms.registry import register
+
+
+@register("fl")
+class FLArm(RoundArm):
+    """Server-based FL without DP (utility upper bound)."""
+
+    requires_dst_online = True    # classic single point of failure
+    topology_kind = "star"
+
+    def __init__(self, model: Model, participants: Sequence[Participant],
+                 cfg: ArmConfig) -> None:
+        super().__init__(model, participants, cfg)
+        n_total = sum(len(p) for p in self.participants)
+        self.rate = cfg.batch_size / n_total
+        self.pad = default_pad(self.rate, self.participants, cfg)
+        self.fedavg = cfg.fl_local_steps > 1
+
+        def batch_grad(p, b, m):
+            def masked_loss(pp):
+                losses = jax.vmap(lambda ex: model.loss_fn(pp, ex))(b)
+                return jnp.sum(losses * m)
+            return jax.grad(masked_loss)(p)
+
+        self._batch_grad = jax.jit(batch_grad)
+
+    def quorum(self) -> tuple[int, int | None]:
+        # server-based FL stalls whenever the hub is offline
+        return 1, self.cfg.fl_server
+
+    def facilitator(self, t: int, active: Sequence[int]) -> int:
+        return self.cfg.fl_server
+
+    def contribution(self, params, i, t, rng, n_shares):
+        part = self.participants[i]
+        if not self.fedavg:  # FedSGD: one masked-sum gradient per client
+            b, m, k = poisson_batch(rng, part, self.rate, self.pad)
+            g = self._batch_grad(params, b, jnp.asarray(m))
+            return Contribution(payload=g, size=k)
+        # FedAvg: k local steps, upload the resulting weights
+        local, consumed = params, 0
+        for _ in range(self.cfg.fl_local_steps):
+            b, m, k = poisson_batch(rng, part, self.rate, self.pad)
+            if k == 0:
+                continue
+            g = self._batch_grad(local, b, jnp.asarray(m))
+            g = tree_div(g, max(k, 1))
+            local = sgd_update(local, g, self.cfg.lr, self.cfg.weight_decay)
+            consumed += k
+        return Contribution(payload=local, size=consumed)
+
+    def aggregate(
+        self,
+        params,
+        contributions: Mapping[int, Contribution],
+        services: AggregationServices,
+    ) -> RoundOutcome:
+        order = sorted(contributions)
+        if not order:
+            return RoundOutcome(params, stepped=False)
+        if self.fedavg:  # size-weighted weight averaging
+            weights = [float(len(self.participants[i])) for i in order]
+            wsum = sum(weights)
+            params = jax.tree_util.tree_map(
+                lambda *xs: sum(w / wsum * x for w, x in zip(weights, xs)),
+                *[contributions[i].payload for i in order],
+            )
+            return RoundOutcome(params, stepped=True,
+                                aggregate_batch=self.cfg.batch_size)
+        agg = services.sum_sizes([contributions[i].size for i in order])
+        if agg == 0:
+            return RoundOutcome(params, stepped=False)
+        total = services.sum_payloads(
+            {i: contributions[i].payload for i in order}
+        )
+        grad = tree_div(total, agg)
+        params = sgd_update(params, grad, self.cfg.lr, self.cfg.weight_decay)
+        return RoundOutcome(params, stepped=True, aggregate_batch=agg)

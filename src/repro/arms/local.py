@@ -1,0 +1,55 @@
+"""Silo-only baseline: one independent non-private model per hospital.
+
+Note on randomness: each silo draws batches from its own stream seeded by
+(config seed, silo index).  The pre-refactor ``run_local`` consumed a single
+shared stream node-by-node, which cannot be reproduced under the event
+backend (nodes interleave in simulated-time order) — per-node streams are
+the arm-contract-compliant equivalent (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.arms.base import ArmConfig, Model, NodeArm, Participant, sgd_update
+from repro.arms.registry import register
+
+
+@register("local")
+class LocalArm(NodeArm):
+    """No collaboration: plain mini-batch SGD per silo."""
+
+    topology_kind = "full"  # topology is irrelevant; zero bytes on wire
+
+    def __init__(self, model: Model, participants: Sequence[Participant],
+                 cfg: ArmConfig) -> None:
+        super().__init__(model, participants, cfg)
+        self._rngs = [
+            np.random.default_rng([cfg.seed, i]) for i in range(self.h)
+        ]
+        self._bs = [min(cfg.batch_size, len(p)) for p in self.participants]
+
+        def loss_and_grad(p, b):
+            def mean_loss(pp):
+                return jnp.mean(jax.vmap(lambda ex: model.loss_fn(pp, ex))(b))
+            return jax.value_and_grad(mean_loss)(p)
+
+        self._loss_and_grad = jax.jit(loss_and_grad)
+
+    def steps_total(self) -> int:
+        return self.cfg.rounds
+
+    def init_node_params(self, i: int):
+        return self.model.init_fn(jax.random.key(self.cfg.seed + i))
+
+    def local_step(self, i, params_i, s):
+        part, bs = self.participants[i], self._bs[i]
+        idx = self._rngs[i].choice(len(part), size=bs, replace=False)
+        b = {"x": jnp.asarray(part.x[idx]), "y": jnp.asarray(part.y[idx])}
+        loss, g = self._loss_and_grad(params_i, b)
+        params_i = sgd_update(params_i, g, self.cfg.lr, self.cfg.weight_decay)
+        return params_i, float(loss), bs

@@ -1,0 +1,127 @@
+"""PriMIA-style local-DP FL as a registered arm.
+
+Every client runs its own DP-SGD: local Poisson rate ``B_h / |D_h|``, the
+FULL noise N(0, (C sigma)^2) added locally (n_shares=1), and a *local*
+accountant.  A client stops contributing once another step would overshoot
+its own epsilon budget — clients with higher sampling rates (small silos)
+drop out first, the forgetting failure mode the paper describes.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+
+from repro.arms.base import (
+    AggregationServices,
+    ArmConfig,
+    Contribution,
+    Model,
+    Participant,
+    RoundArm,
+    RoundOutcome,
+    poisson_batch,
+    sgd_update,
+    tree_div,
+)
+from repro.arms.registry import register
+from repro.core import dp as dp_lib
+from repro.core.accountant import RDPAccountant, steps_for_epsilon
+
+_NOISE_SALT = 31  # legacy key derivation: fold_in(fold_in(key, 31 + t), i)
+
+
+@register("primia")
+class PriMIAArm(RoundArm):
+    """Local-DP FL through a star hub, per-client accountants."""
+
+    private = True
+    requires_dst_online = True
+    empty_break = True            # every budget exhausted -> run over
+    topology_kind = "star"
+
+    def __init__(self, model: Model, participants: Sequence[Participant],
+                 cfg: ArmConfig) -> None:
+        super().__init__(model, participants, cfg)
+        per_client_batch = max(1, cfg.batch_size // self.h)
+        self.rates = [
+            min(1.0, per_client_batch / max(len(p), 1))
+            for p in self.participants
+        ]
+        self.pads = [
+            cfg.max_pad_batch or max(8, int(r * len(p) * 4) or 8)
+            for r, p in zip(self.rates, self.participants)
+        ]
+        self.accts = [
+            RDPAccountant(sampling_rate=r,
+                          noise_multiplier=cfg.dp.noise_multiplier,
+                          delta=cfg.dp.delta)
+            for r in self.rates
+        ]
+        if cfg.epsilon_budget is not None:
+            # a client only participates while ANOTHER step stays within its
+            # local budget (never overshoots)
+            self.max_rounds = [
+                steps_for_epsilon(r, cfg.dp.noise_multiplier,
+                                  cfg.epsilon_budget, cfg.dp.delta,
+                                  max_steps=cfg.rounds + 1)
+                for r in self.rates
+            ]
+        else:
+            self.max_rounds = [cfg.rounds] * self.h
+        self._key = jax.random.key(cfg.seed)
+        self._clipped_sum = jax.jit(
+            lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
+                model.loss_fn, p, b,
+                clip_norm=cfg.dp.clip_norm,
+                microbatch_size=cfg.dp.microbatch_size,
+                mask=m,
+            )
+        )
+
+    def quorum(self) -> tuple[int, int | None]:
+        return 1, self.cfg.fl_server
+
+    def participates(self, i: int, t: int) -> bool:
+        return self.accts[i].steps < self.max_rounds[i]
+
+    def facilitator(self, t: int, active: Sequence[int]) -> int:
+        return self.cfg.fl_server
+
+    def contribution(self, params, i, t, rng, n_shares):
+        b, m, k = poisson_batch(
+            rng, self.participants[i], self.rates[i], self.pads[i]
+        )
+        g_sum, loss = self._clipped_sum(params, b, jax.numpy.asarray(m))
+        nkey = jax.random.fold_in(
+            jax.random.fold_in(self._key, _NOISE_SALT + t), i
+        )
+        # Local DP: the FULL noise per client (n_shares=1).
+        g = dp_lib.tree_add_noise(
+            g_sum, nkey, clip_norm=self.cfg.dp.clip_norm,
+            noise_multiplier=self.cfg.dp.noise_multiplier, n_shares=1,
+        )
+        g = tree_div(g, max(k, 1))
+        self.accts[i].step()  # privacy is spent at compute time, not arrival
+        return Contribution(payload=g, size=k, loss=float(loss))
+
+    def aggregate(
+        self,
+        params,
+        contributions: Mapping[int, Contribution],
+        services: AggregationServices,
+    ) -> RoundOutcome:
+        order = sorted(contributions)
+        if not order:
+            return RoundOutcome(params, stepped=False)
+        total = services.sum_payloads(
+            {i: contributions[i].payload for i in order}
+        )
+        grad = tree_div(total, len(order))
+        params = sgd_update(params, grad, self.cfg.lr, self.cfg.weight_decay)
+        agg = int(sum(contributions[i].size for i in order))
+        return RoundOutcome(params, stepped=True, aggregate_batch=agg)
+
+    def epsilon(self) -> float:
+        return max(a.epsilon() for a in self.accts)

@@ -1,0 +1,48 @@
+"""Arm registry: every federation arm is written once and registered here.
+
+``register`` is used as a class decorator on ``Arm`` subclasses; ``get``
+returns the class so callers instantiate it with their (model, participants,
+config).  Both execution backends (``LocalRunner``, ``SimRunner``) consume
+the same registered class — registering an arm is all it takes to get it on
+both backends, the CLI (``python -m repro.run``), and the CI smoke matrix.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Callable, TypeVar
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.arms.base import Arm
+
+_REGISTRY: dict[str, type["Arm"]] = {}
+
+A = TypeVar("A", bound="type[Arm]")
+
+
+def register(name: str) -> Callable[[A], A]:
+    """Class decorator: ``@register("decaph")`` above an ``Arm`` subclass."""
+
+    def deco(cls: A) -> A:
+        if name in _REGISTRY:
+            raise ValueError(
+                f"arm {name!r} already registered ({_REGISTRY[name].__qualname__})"
+            )
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get(name: str) -> type["Arm"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arm {name!r}; registered arms: {', '.join(names())}"
+        ) from None
+
+
+def names() -> tuple[str, ...]:
+    """Registered arm names, sorted for stable CLI/CI enumeration."""
+    return tuple(sorted(_REGISTRY))

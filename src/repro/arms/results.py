@@ -1,0 +1,100 @@
+"""The single result type every arm/backend combination returns.
+
+Pre-refactor the repo had two: ``federation.RunResult`` (idealized runs) and
+``sim.protocols.ArmReport`` (simulated-time runs), which forced every consumer
+to branch on where a result came from.  ``RunReport`` unifies them: training
+outputs (params, logs, epsilon) are always present; the systems story
+(wall-clock, bytes-on-wire, dropout bookkeeping) lives in an optional
+``SimTiming`` section that only the sim backend fills in.
+
+Both legacy names remain as aliases (``RunResult = ArmReport = RunReport``)
+and the legacy attribute spellings (``per_client_params``, ``wall_clock``,
+``bytes_on_wire``, ...) are provided as properties so pre-refactor callers and
+benchmarks keep working unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class RoundLog:
+    """One communication round (or, for node arms, one lockstep of steps)."""
+
+    round: int
+    leader: int
+    loss: float
+    epsilon: float
+    aggregate_batch: int
+
+
+@dataclasses.dataclass
+class SimTiming:
+    """Systems metrics only the discrete-event backend can produce."""
+
+    wall_clock: float = 0.0       # simulated seconds
+    bytes_on_wire: float = 0.0
+    dropout_events: int = 0       # NodeDropout events that fired
+    recoveries: int = 0           # SecAgg Shamir recoveries performed
+    lost_rounds: int = 0          # rounds voided (dead facilitator, empty batch)
+    events: int = 0               # engine events processed
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What any (arm, backend) run returns.
+
+    ``timing`` is ``None`` for the idealized backend — everything is free and
+    instantaneous there, so systems metrics would be meaningless zeros.
+    """
+
+    params: PyTree
+    logs: list[RoundLog]
+    epsilon: float
+    rounds_completed: int
+    arm: str = ""
+    backend: str = ""
+    per_node_params: list[PyTree] | None = None
+    timing: SimTiming | None = None
+
+    # -- legacy RunResult spelling -------------------------------------------
+
+    @property
+    def per_client_params(self) -> list[PyTree] | None:
+        return self.per_node_params
+
+    # -- legacy ArmReport spellings ------------------------------------------
+
+    @property
+    def wall_clock(self) -> float:
+        return self.timing.wall_clock if self.timing else 0.0
+
+    @property
+    def bytes_on_wire(self) -> float:
+        return self.timing.bytes_on_wire if self.timing else 0.0
+
+    @property
+    def dropout_events(self) -> int:
+        return self.timing.dropout_events if self.timing else 0
+
+    @property
+    def recoveries(self) -> int:
+        return self.timing.recoveries if self.timing else 0
+
+    @property
+    def lost_rounds(self) -> int:
+        return self.timing.lost_rounds if self.timing else 0
+
+    @property
+    def events(self) -> int:
+        return self.timing.events if self.timing else 0
+
+    def mean_loss(self) -> float:
+        """Mean of the logged (finite) round losses; NaN when none exist."""
+        vals = [l.loss for l in self.logs if math.isfinite(l.loss)]
+        return sum(vals) / len(vals) if vals else float("nan")

@@ -1,0 +1,630 @@
+"""The two execution backends that consume registered arms.
+
+``LocalRunner`` is the idealized lockstep executor (every hospital
+infinitely fast and always online, free communication) — it reproduces the
+pre-refactor ``repro.core.federation.run_*`` loops seed-for-seed.
+``SimRunner`` drives the *same arm object* through the discrete-event engine
+(``repro.sim``), adding simulated wall-clock, bytes-on-wire, stragglers,
+dropouts and SecAgg mask recovery — reproducing the pre-refactor
+``repro.sim.protocols.simulate_*`` loops.
+
+Backend-level services (never implemented inside an arm):
+  * secure aggregation — honest-but-curious ``SecAggSession`` sums on the
+    idealized backend, ``DropoutRobustSession`` ciphertexts + Shamir mask
+    recovery on the sim backend;
+  * gossip pairwise averaging — the backend applies the atomic pair average
+    when an exchange lands (and models its transfer under simulated time);
+  * the transport itself: gathers, broadcasts, and their byte accounting.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.arms.base import (
+    AggregationServices,
+    Arm,
+    Contribution,
+    NodeArm,
+    RoundArm,
+    tree_bytes,
+    tree_sum,
+)
+from repro.arms.results import RoundLog, RunReport, SimTiming
+from repro.core.secagg import (
+    DropoutRobustSession,
+    SecAggConfig,
+    secagg_recovery_bytes,
+    secure_sum,
+)
+from repro.sim.engine import (
+    ComputeDone,
+    EventEngine,
+    NodeDropout,
+    NodeRejoin,
+    TransferDone,
+)
+from repro.sim.nodes import HospitalNode
+from repro.sim.topology import Topology
+
+PyTree = Any
+
+_SHARE_BYTES = 16.0  # one Shamir share on the wire (index + 61-bit y)
+
+
+def default_topology(kind: str, n: int, center: int = 0) -> Topology:
+    """The natural topology for an arm's ``topology_kind``."""
+    if kind == "star":
+        return Topology.star(n, center)
+    if kind == "ring":
+        return Topology.ring(n)
+    return Topology.full(n)
+
+
+# -- aggregation services ----------------------------------------------------
+
+
+class _IdealServices(AggregationServices):
+    """Free, lossless aggregation; SecAgg runs over the raw payload trees."""
+
+    def __init__(self, cfg, n: int, t: int, secure: bool) -> None:
+        self._cfg, self._n, self._t, self._secure = cfg, n, t, secure
+
+    def sum_sizes(self, sizes: Sequence[int]) -> int:
+        if self._secure:
+            # aggregate mini-batch size ||B^t|| via SecAgg (integer-exact)
+            total = secure_sum(
+                [jnp.asarray([float(s)]) for s in sizes],
+                SecAggConfig(self._n, frac_bits=0,
+                             seed=self._cfg.seed * 7919 + self._t),
+            )[0]
+            return int(round(float(total)))
+        return int(sum(sizes))
+
+    def sum_payloads(self, payloads: Mapping[int, PyTree]) -> PyTree:
+        trees = [payloads[i] for i in sorted(payloads)]
+        if self._secure:
+            if len(trees) != self._n:
+                raise ValueError(
+                    "idealized SecAgg needs every participant's upload "
+                    f"({len(trees)} of {self._n})"
+                )
+            return secure_sum(
+                trees,
+                SecAggConfig(self._n, self._cfg.secagg_frac_bits,
+                             seed=self._cfg.seed + self._t),
+            )
+        return tree_sum(trees)
+
+
+class _SimServices(AggregationServices):
+    """Sums over what actually arrived; SecAgg over gathered ciphertexts."""
+
+    def __init__(self, session, uploads: dict[int, Any] | None) -> None:
+        self._session, self._uploads = session, uploads
+
+    def sum_sizes(self, sizes: Sequence[int]) -> int:
+        return int(sum(sizes))
+
+    def sum_payloads(self, payloads: Mapping[int, PyTree]) -> PyTree:
+        if self._session is not None:
+            # Shamir mask recovery for dropped participants happens inside
+            # the session; the backend already charged its wire/time cost.
+            return self._session.aggregate(self._uploads)
+        return tree_sum([payloads[i] for i in sorted(payloads)])
+
+
+# -- idealized backend -------------------------------------------------------
+
+
+class LocalRunner:
+    """Idealized lockstep execution of any registered arm."""
+
+    backend = "ideal"
+
+    def __init__(self, topo: Topology | None = None) -> None:
+        self.topo = topo  # only node arms (gossip) consult it
+
+    def run(self, arm: Arm) -> RunReport:
+        if isinstance(arm, RoundArm):
+            return self._run_rounds(arm)
+        if isinstance(arm, NodeArm):
+            return self._run_nodes(arm)
+        raise TypeError(f"unknown arm mode {arm.mode!r} for {arm.name!r}")
+
+    def _run_rounds(self, arm: RoundArm) -> RunReport:
+        cfg, h = arm.cfg, arm.h
+        params = arm.init_params()
+        rng = np.random.default_rng(cfg.seed)
+        logs: list[RoundLog] = []
+        for t in range(arm.planned_rounds()):
+            active = [i for i in range(h) if arm.participates(i, t)]
+            if not active:
+                break  # nobody left who can contribute
+            dst = arm.facilitator(t, active)
+            contribs: dict[int, Contribution] = {}
+            for i in active:  # ascending index: the arm-contract rng order
+                c = arm.contribution(params, i, t, rng, len(active))
+                if c is not None:
+                    contribs[i] = c
+            if not contribs:
+                if arm.empty_break:
+                    break
+                continue
+            services = _IdealServices(
+                cfg, h, t, secure=arm.secure_uploads and cfg.use_secagg
+            )
+            outcome = arm.aggregate(params, contribs, services)
+            if outcome.stepped:
+                params = outcome.params
+                arm.account()
+                logs.append(RoundLog(t, dst, outcome.loss, arm.epsilon(),
+                                     outcome.aggregate_batch))
+                if arm.should_stop():
+                    break
+            elif arm.void_logs:
+                logs.append(RoundLog(t, dst, float("nan"), arm.epsilon(), 0))
+        return RunReport(
+            params=params, logs=logs, epsilon=arm.epsilon(),
+            rounds_completed=len(logs), arm=arm.name, backend=self.backend,
+        )
+
+    def _run_nodes(self, arm: NodeArm) -> RunReport:
+        cfg, h = arm.cfg, arm.h
+        topo = self.topo or default_topology(arm.topology_kind, h,
+                                             cfg.fl_server)
+        per_node = [arm.init_node_params(i) for i in range(h)]
+        steps_done = [0] * h
+        retired = [False] * h
+        total = arm.steps_total()
+        logs: list[RoundLog] = []
+        for s in range(total):
+            losses, consumed, stepped = [], 0, []
+            for i in range(h):
+                if retired[i]:
+                    continue
+                r = arm.local_step(i, per_node[i], steps_done[i])
+                if r is None:
+                    retired[i] = True
+                    continue
+                per_node[i], loss, k = r
+                steps_done[i] += 1
+                losses.append(loss)
+                consumed += k
+                stepped.append(i)
+            if not stepped:
+                break  # every node retired
+            # exchanges fire in ascending node order — the same order an
+            # ideal uniform trace delivers them under the event backend
+            for i in stepped:
+                if arm.wants_exchange(i, steps_done[i]):
+                    j = arm.select_peer(i, topo.neighbors(i))
+                    if j is not None:
+                        _average_pair(per_node, i, j)
+            logs.append(RoundLog(s, -1, float(np.mean(losses)),
+                                 arm.epsilon(), consumed))
+        params, per_node = arm.consensus(per_node)
+        return RunReport(
+            params=params, logs=logs, epsilon=arm.epsilon(),
+            rounds_completed=min(steps_done), arm=arm.name,
+            backend=self.backend, per_node_params=per_node,
+        )
+
+
+def _average_pair(per_node: list[PyTree], i: int, j: int) -> None:
+    """Backend service: atomic pairwise model averaging (AD-PSGD style)."""
+    avg = jax.tree_util.tree_map(
+        lambda a, b: 0.5 * (a + b), per_node[i], per_node[j]
+    )
+    per_node[i] = avg
+    per_node[j] = avg
+
+
+# -- simulated-time backend --------------------------------------------------
+
+# Every gather/broadcast stamps its events with a unique tag.  Events from a
+# voided round can outlive the round (a dropped node's in-flight upload); the
+# tag match keeps them from being mistaken for the current round's traffic.
+_tag_counter = itertools.count()
+
+
+class SimRunner:
+    """Discrete-event execution of any registered arm (PR-1 engine)."""
+
+    backend = "sim"
+
+    def __init__(self, nodes: Sequence[HospitalNode], topo: Topology) -> None:
+        self.nodes = list(nodes)
+        self.topo = topo
+
+    def run(self, arm: Arm) -> RunReport:
+        if len(self.nodes) != arm.h:
+            raise ValueError("one HospitalNode per participant required")
+        if isinstance(arm, RoundArm):
+            return self._run_rounds(arm)
+        if isinstance(arm, NodeArm):
+            return self._run_nodes(arm)
+        raise TypeError(f"unknown arm mode {arm.mode!r} for {arm.name!r}")
+
+    # --- shared engine plumbing ---------------------------------------------
+
+    def _engine(self) -> EventEngine:
+        engine = EventEngine()
+        for node in self.nodes:
+            for t_off, t_on in node.dropouts:
+                engine.schedule_at(t_off, NodeDropout(node.index))
+                if t_on is not None:
+                    engine.schedule_at(t_on, NodeRejoin(node.index))
+        return engine
+
+    def _apply_availability(self, ev) -> bool:
+        """Handle dropout/rejoin events; True if ``ev`` was one of them."""
+        if isinstance(ev, NodeDropout):
+            self.nodes[ev.node].online = False
+            return True
+        if isinstance(ev, NodeRejoin):
+            self.nodes[ev.node].online = True
+            return True
+        return False
+
+    def _advance_to_quorum(
+        self, engine: EventEngine, minimum: int, require: int | None
+    ) -> tuple[int, bool]:
+        """Fast-forward availability events until >= minimum nodes online
+        (and, if given, node ``require`` — e.g. the star hub — is online)."""
+        n_drop = 0
+        while (
+            sum(n.online for n in self.nodes) < minimum
+            or (require is not None and not self.nodes[require].online)
+        ):
+            ev = engine.pop()
+            if ev is None:
+                return n_drop, False  # quorum never reachable again
+            if self._apply_availability(ev):
+                n_drop += isinstance(ev, NodeDropout)
+        return n_drop, True
+
+    def _gather_round(
+        self,
+        engine: EventEngine,
+        dst: int,
+        work: dict[int, tuple[Any, float, float]],
+    ) -> tuple[dict[int, Any], set[int], float, int]:
+        """One synchronous gather: every node computes, then uploads to
+        ``dst``.  ``work[i] = (payload, compute_seconds, nbytes)``.  Returns
+        ``(delivered, dropped_mid_round, bytes_on_wire, dropout_events)``.
+        A node whose NodeDropout fires before its upload lands is excluded
+        from ``delivered`` — exactly the case SecAgg recovery must handle."""
+        nodes, topo = self.nodes, self.topo
+        tag = f"sync-{next(_tag_counter)}"
+        pending = set(work)
+        delivered: dict[int, Any] = {}
+        dropped_mid: set[int] = set()
+        inflight: dict[int, int] = {}  # node -> cancel handle of next event
+        wire = 0.0
+        n_drop = 0
+        for i, (payload, compute_s, nbytes) in work.items():
+            inflight[i] = engine.schedule(
+                compute_s, ComputeDone(i, tag=tag, payload=(payload, nbytes))
+            )
+        while pending:
+            ev = engine.pop()
+            if ev is None:
+                break
+            if self._apply_availability(ev):
+                if isinstance(ev, NodeDropout):
+                    n_drop += 1
+                    if ev.node in pending:
+                        pending.discard(ev.node)
+                        dropped_mid.add(ev.node)
+                        # the dropout kills the compute / connection: its
+                        # upload must never arrive, so the aggregator never
+                        # holds both a "dropped" ciphertext and its
+                        # reconstructed pads
+                        handle = inflight.pop(ev.node, None)
+                        if handle is not None:
+                            engine.cancel(handle)
+                continue
+            if isinstance(ev, ComputeDone) and ev.tag == tag:
+                if not nodes[ev.node].online:
+                    continue  # dropped during compute; already counted
+                payload, nbytes = ev.payload
+                if ev.node == dst:
+                    delivered[ev.node] = payload
+                    pending.discard(ev.node)
+                    inflight.pop(ev.node, None)
+                else:
+                    wire += nbytes
+                    inflight[ev.node] = engine.schedule(
+                        topo.transfer_time(ev.node, dst, nbytes),
+                        TransferDone(ev.node, dst, nbytes, tag=tag,
+                                     payload=payload),
+                    )
+            elif isinstance(ev, TransferDone) and ev.tag == tag:
+                if ev.src in pending:
+                    delivered[ev.src] = ev.payload
+                    pending.discard(ev.src)
+                    inflight.pop(ev.src, None)
+        return delivered, dropped_mid, wire, n_drop
+
+    def _broadcast(
+        self, engine: EventEngine, src: int, nbytes: float,
+        targets: Sequence[int],
+    ) -> tuple[float, int]:
+        """Send ``nbytes`` from ``src`` to each online target; barrier on
+        arrival."""
+        nodes, topo = self.nodes, self.topo
+        tag = f"bcast-{next(_tag_counter)}"
+        outstanding = 0
+        wire = 0.0
+        n_drop = 0
+        for j in targets:
+            if j == src or not nodes[j].online:
+                continue
+            wire += nbytes
+            outstanding += 1
+            engine.schedule(
+                topo.transfer_time(src, j, nbytes),
+                TransferDone(src, j, nbytes, tag=tag),
+            )
+        while outstanding:
+            ev = engine.pop()
+            if ev is None:
+                break
+            if self._apply_availability(ev):
+                n_drop += isinstance(ev, NodeDropout)
+                continue
+            if isinstance(ev, TransferDone) and ev.tag == tag:
+                outstanding -= 1
+        return wire, n_drop
+
+    # --- round-based arms ----------------------------------------------------
+
+    def _run_rounds(self, arm: RoundArm) -> RunReport:
+        cfg, h = arm.cfg, arm.h
+        nodes = self.nodes
+        params = arm.init_params()
+        rng = np.random.default_rng(cfg.seed)
+        model_bytes = tree_bytes(params, cfg.bytes_per_param)
+        engine = self._engine()
+        wire = 0.0
+        dropouts = recoveries = lost = completed = 0
+        logs: list[RoundLog] = []
+        minimum, require = arm.quorum()
+
+        # planned_rounds() pre-caps for an epsilon budget exactly like the
+        # idealized backend — without it the sim side would overshoot the
+        # operator's budget by one round before should_stop() fires
+        for t in range(arm.planned_rounds()):
+            d, ok = self._advance_to_quorum(engine, minimum, require)
+            dropouts += d
+            if not ok:
+                break
+            active = [
+                i for i in range(h)
+                if nodes[i].online and arm.participates(i, t)
+            ]
+            if not active:
+                if arm.empty_break:
+                    break
+                lost += 1
+                continue
+            dst = arm.facilitator(t, active)
+
+            contribs: dict[int, Contribution] = {}
+            for i in active:  # ascending index: the arm-contract rng order
+                c = arm.contribution(params, i, t, rng, len(active))
+                if c is not None:
+                    contribs[i] = c
+            if not contribs:
+                if arm.empty_break:
+                    break
+                lost += 1
+                continue
+
+            session = None
+            slot_of: dict[int, int] = {}
+            if arm.secure_uploads and cfg.use_secagg:
+                n_active = len(active)
+                # quorum guarantees n_active >= any configured threshold
+                threshold = cfg.secagg_threshold or (n_active // 2 + 1)
+                session = DropoutRobustSession(
+                    SecAggConfig(n_active, cfg.secagg_frac_bits,
+                                 seed=cfg.seed * 6007 + t),
+                    params, threshold=threshold,
+                )
+                wire += secagg_recovery_bytes(n_active)["setup_bytes"]
+                slot_of = {i: s for s, i in enumerate(active)}
+
+            work = {}
+            for i, c in contribs.items():
+                payload = (
+                    session.upload(slot_of[i], c.payload) if session
+                    else c.payload
+                )
+                work[i] = (payload, nodes[i].compute_time(c.size), model_bytes)
+            delivered, dropped_mid, w, d = self._gather_round(
+                engine, dst, work
+            )
+            wire += w
+            dropouts += d
+            dst_dead = dst in dropped_mid or (
+                not nodes[dst].online if arm.requires_dst_online
+                else dst not in delivered
+            )
+            if dst_dead:
+                lost += 1
+                continue  # facilitator died mid-round; round is void
+
+            uploads = None
+            if session is not None:
+                uploads = {slot_of[i]: delivered[i] for i in delivered}
+                if len(uploads) < session.threshold:
+                    lost += 1
+                    continue  # below recovery threshold: protocol aborts
+                if dropped_mid:
+                    # survivors reveal shares of each dropped secret so the
+                    # facilitator can reconstruct and cancel its pads
+                    recoveries += len(dropped_mid)
+                    wire += secagg_recovery_bytes(
+                        len(active), len(dropped_mid)
+                    )["recovery_bytes"]
+                    dropouts += self._gather_shares(engine, dst, delivered)
+
+            dl_contribs = {i: contribs[i] for i in delivered}
+            outcome = arm.aggregate(
+                params, dl_contribs, _SimServices(session, uploads)
+            )
+            if not outcome.stepped:
+                lost += 1  # e.g. empty Poisson draw across the cohort
+                continue
+            params = outcome.params
+            w, d = self._broadcast(
+                engine, dst, model_bytes,
+                [i for i in range(h) if nodes[i].online],
+            )
+            wire += w
+            dropouts += d
+            arm.account()
+            completed += 1
+            logs.append(RoundLog(t, dst, outcome.loss, arm.epsilon(),
+                                 outcome.aggregate_batch))
+            if arm.should_stop():
+                break
+
+        return RunReport(
+            params=params, logs=logs, epsilon=arm.epsilon(),
+            rounds_completed=completed, arm=arm.name, backend=self.backend,
+            timing=SimTiming(
+                wall_clock=engine.now, bytes_on_wire=wire,
+                dropout_events=dropouts, recoveries=recoveries,
+                lost_rounds=lost, events=engine.processed,
+            ),
+        )
+
+    def _gather_shares(
+        self, engine: EventEngine, dst: int, delivered: Mapping[int, Any]
+    ) -> int:
+        """Time cost of the Shamir share gather (tiny, latency-bound)."""
+        tag = f"shares-{next(_tag_counter)}"
+        surv = [i for i in delivered if i != dst]
+        for j in surv:
+            engine.schedule(
+                self.topo.transfer_time(j, dst, _SHARE_BYTES),
+                TransferDone(j, dst, _SHARE_BYTES, tag=tag),
+            )
+        outstanding = len(surv)
+        n_drop = 0
+        while outstanding:
+            ev = engine.pop()
+            if ev is None:
+                break
+            if self._apply_availability(ev):
+                n_drop += isinstance(ev, NodeDropout)
+                continue
+            if isinstance(ev, TransferDone) and ev.tag == tag:
+                outstanding -= 1
+        return n_drop
+
+    # --- per-node arms --------------------------------------------------------
+
+    def _run_nodes(self, arm: NodeArm) -> RunReport:
+        cfg, h = arm.cfg, arm.h
+        nodes, topo = self.nodes, self.topo
+        per_node = [arm.init_node_params(i) for i in range(h)]
+        model_bytes = tree_bytes(per_node[0], cfg.bytes_per_param)
+        total = arm.steps_total()
+        engine = self._engine()
+        steps_done = [0] * h
+        parked = [False] * h
+        retired = [False] * h
+        wire = 0.0
+        dropouts = exchanges = 0
+        last_progress = 0.0
+
+        def unfinished(i: int) -> bool:
+            return not retired[i] and steps_done[i] < total
+
+        def start_step(i: int) -> None:
+            engine.schedule(
+                nodes[i].compute_time(arm.step_cost(i)),
+                ComputeDone(i, tag="step"),
+            )
+
+        def handler(ev) -> None:
+            nonlocal wire, dropouts, exchanges, last_progress
+            if isinstance(ev, NodeDropout):
+                nodes[ev.node].online = False
+                dropouts += 1
+                return
+            if isinstance(ev, NodeRejoin):
+                nodes[ev.node].online = True
+                if parked[ev.node] and unfinished(ev.node):
+                    parked[ev.node] = False
+                    start_step(ev.node)
+                return
+            if isinstance(ev, ComputeDone) and ev.tag == "step":
+                i = ev.node
+                if not nodes[i].online:
+                    parked[i] = True  # step lost mid-compute; redo on rejoin
+                    return
+                r = arm.local_step(i, per_node[i], steps_done[i])
+                if r is None:
+                    retired[i] = True  # e.g. local privacy budget exhausted
+                    return
+                per_node[i], _loss, _k = r
+                steps_done[i] += 1
+                last_progress = engine.now
+                if arm.wants_exchange(i, steps_done[i]):
+                    # skip neighbours currently offline (connection refused);
+                    # a neighbour dying mid-transfer is handled at arrival
+                    nbrs = [j for j in topo.neighbors(i) if nodes[j].online]
+                    j = arm.select_peer(i, nbrs)
+                    if j is not None:
+                        wire += model_bytes  # outbound leg
+                        engine.schedule(
+                            topo.transfer_time(i, j, model_bytes),
+                            TransferDone(i, j, model_bytes, tag="xchg"),
+                        )
+                if unfinished(i):
+                    start_step(i)  # async: do not wait for the transfer
+                return
+            if isinstance(ev, TransferDone) and ev.tag == "xchg":
+                if nodes[ev.src].online and nodes[ev.dst].online:
+                    _average_pair(per_node, ev.src, ev.dst)
+                    wire += model_bytes  # return leg only on real exchange
+                    exchanges += 1
+                    last_progress = engine.now
+
+        for i in range(h):
+            if nodes[i].online:
+                start_step(i)
+            else:
+                parked[i] = True
+        # run until every node finished/retired and in-flight exchanges land
+        while any(unfinished(i) for i in range(h)) or len(engine):
+            if not any(unfinished(i) for i in range(h)):
+                # only drain transfers that are already in flight
+                if engine.pending_kinds() <= {NodeDropout, NodeRejoin}:
+                    break  # nothing left that changes the models
+            ev = engine.pop()
+            if ev is None:
+                break
+            handler(ev)
+
+        params, per_node = arm.consensus(per_node)
+        return RunReport(
+            params=params, logs=[], epsilon=arm.epsilon(),
+            rounds_completed=min(steps_done), arm=arm.name,
+            backend=self.backend, per_node_params=per_node,
+            timing=SimTiming(
+                wall_clock=last_progress, bytes_on_wire=wire,
+                dropout_events=dropouts, recoveries=0, lost_rounds=0,
+                events=engine.processed,
+            ),
+        )

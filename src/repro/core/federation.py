@@ -1,420 +1,106 @@
-"""Host-level federated runtimes: DeCaPH and the paper's comparison arms.
+"""Deprecated host-level entry points for the paper's federation arms.
 
-This module simulates H participants (hospitals) as the paper deploys them —
-each holding a private shard, communicating once per round — so the paper's
-experiments (Figs. 2-5) can be reproduced end to end.  The SPMD fast path for
-pod-scale models lives in ``repro.core.decaph_step``; both paths share the DP
-mechanics in ``repro.core.dp`` and are equivalence-tested.
+Since the Arm/Backend redesign every arm's training numerics live in exactly
+one place — ``repro.arms`` — and run on either the idealized backend
+(``repro.arms.LocalRunner``) or the discrete-event simulator
+(``repro.arms.SimRunner``).  The ``run_*`` functions below are thin
+deprecation shims over the idealized backend kept for pre-refactor callers;
+they reproduce the historical results seed-for-seed.  New code should use::
 
-These runtimes are *idealized*: every hospital is infinitely fast, always
-online, and communication is free.  For simulated wall-clock, bytes-on-wire,
-stragglers and dropout (including SecAgg mask recovery), drive the same arms
-through the discrete-event simulator in ``repro.sim``.
+    import repro.arms as arms
+    report = arms.run("decaph", model, silos, arms.ArmConfig(...))
 
-Arms implemented (Study design):
-  * ``decaph``  — the paper's framework: shared Poisson rate, per-example clip,
-    per-participant noise shares, SecAgg sum, rotating leader.
-  * ``fl``      — FedSGD with the same sampling/sync cadence, no clip/noise
-    (the paper's non-private upper bound; SL is equivalent for utility).
-  * ``primia``  — local-DP FL: every client runs its own DP-SGD with full
-    local noise and a *local* accountant; clients drop out when their local
-    budget is exhausted (the forgetting failure mode the paper describes).
-  * ``local``   — silo-only training, no collaboration.
+``FederationConfig`` is an alias of :class:`repro.arms.ArmConfig` and
+``RunResult`` of :class:`repro.arms.RunReport` (the unified result type with
+an optional timing section only the sim backend fills in).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Sequence
+import warnings
+from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dp as dp_lib
-from repro.core.accountant import RDPAccountant
-from repro.core.leader import leader_schedule
-from repro.core.secagg import SecAggConfig, secure_sum
+from repro.arms import LocalRunner, RunReport, get
+from repro.arms.base import (
+    ArmConfig,
+    Model,
+    Participant,
+    _global_stats,
+    normalize_participants,
+    poisson_batch as _new_poisson_batch,
+    sgd_update,
+)
+from repro.arms.results import RoundLog
 
-PyTree = Any
+__all__ = [
+    "FederationConfig",
+    "Model",
+    "Participant",
+    "RoundLog",
+    "RunResult",
+    "RUNNERS",
+    "normalize_participants",
+    "run_decaph",
+    "run_fl",
+    "run_local",
+    "run_pate",
+    "run_primia",
+]
 
-
-@dataclasses.dataclass
-class Model:
-    """Functional model triple used by the federation runtimes."""
-
-    init_fn: Callable[[jax.Array], PyTree]
-    loss_fn: Callable[[PyTree, PyTree], jax.Array]  # (params, one example) -> scalar
-    predict_fn: Callable[[PyTree, jax.Array], jax.Array]
-
-
-@dataclasses.dataclass
-class Participant:
-    """One hospital: a private (X, y) shard."""
-
-    x: np.ndarray
-    y: np.ndarray
-
-    def __len__(self) -> int:
-        return len(self.x)
-
-
-@dataclasses.dataclass
-class FederationConfig:
-    rounds: int = 100
-    batch_size: int = 64           # desired aggregate mini-batch size B
-    lr: float = 0.1
-    weight_decay: float = 0.0
-    dp: dp_lib.DPConfig = dataclasses.field(default_factory=dp_lib.DPConfig)
-    epsilon_budget: float | None = None   # stop when the accountant exceeds it
-    use_secagg: bool = True        # run the real fixed-point SecAgg protocol
-    secagg_frac_bits: int = 16
-    fl_local_steps: int = 1        # >1 = FedAvg (weight averaging) for run_fl
-    leader_strategy: str = "uniform"
-    seed: int = 0
-    eval_every: int = 0            # 0 = never
-    max_pad_batch: int | None = None  # static padded per-silo batch (jit shapes)
+# Legacy aliases — same objects, historical names.
+FederationConfig = ArmConfig
+RunResult = RunReport
+_sgd_update = sgd_update
+_poisson_batch = _new_poisson_batch
 
 
-@dataclasses.dataclass
-class RoundLog:
-    round: int
-    leader: int
-    loss: float
-    epsilon: float
-    aggregate_batch: int
-
-
-@dataclasses.dataclass
-class RunResult:
-    params: PyTree
-    logs: list[RoundLog]
-    epsilon: float
-    rounds_completed: int
-    per_client_params: list[PyTree] | None = None
-
-
-def _global_stats(parts: Sequence[Participant]) -> tuple[np.ndarray, np.ndarray]:
-    """Preparation-phase global mean/std via (conceptually) SecAgg sums."""
-    n = sum(len(p) for p in parts)
-    s = sum(p.x.sum(axis=0) for p in parts)
-    mean = s / n
-    sq = sum(((p.x - mean) ** 2).sum(axis=0) for p in parts)
-    std = np.sqrt(sq / n) + 1e-8
-    return mean.astype(np.float32), std.astype(np.float32)
-
-
-def normalize_participants(parts: Sequence[Participant]) -> list[Participant]:
-    mean, std = _global_stats(parts)
-    return [Participant((p.x - mean) / std, p.y) for p in parts]
-
-
-def _poisson_batch(
-    rng: np.random.Generator, part: Participant, rate: float, pad_to: int
-) -> tuple[dict[str, np.ndarray], np.ndarray, int]:
-    """Poisson-sample a silo mini-batch, padded to a static shape + mask."""
-    sel = rng.random(len(part)) < rate
-    idx = np.nonzero(sel)[0]
-    k = len(idx)
-    if k > pad_to:
-        idx = idx[:pad_to]
-        k = pad_to
-    xb = np.zeros((pad_to,) + part.x.shape[1:], part.x.dtype)
-    yb = np.zeros((pad_to,) + part.y.shape[1:], part.y.dtype)
-    xb[:k] = part.x[idx]
-    yb[:k] = part.y[idx]
-    mask = np.zeros((pad_to,), np.float32)
-    mask[:k] = 1.0
-    return {"x": xb, "y": yb}, mask, k
-
-
-def _sgd_update(params: PyTree, grads: PyTree, lr: float, wd: float) -> PyTree:
-    return jax.tree_util.tree_map(
-        lambda p, g: p - lr * (g + wd * p), params, grads
+def _deprecated(old: str, arm: str) -> None:
+    warnings.warn(
+        f"repro.core.federation.{old} is deprecated; use "
+        f"repro.arms.run({arm!r}, ...) (idealized backend) or "
+        f"repro.arms.SimRunner for simulated time",
+        DeprecationWarning,
+        stacklevel=3,
     )
 
 
-def run_decaph(
-    model: Model,
-    participants: Sequence[Participant],
-    cfg: FederationConfig,
-    *,
-    eval_fn: Callable[[PyTree], float] | None = None,
-) -> RunResult:
-    """The DeCaPH protocol, Steps 1-7 of the paper."""
-    h = len(participants)
-    n_total = sum(len(p) for p in participants)
-    rate = cfg.batch_size / n_total
-    pad = cfg.max_pad_batch or max(8, int(rate * max(len(p) for p in participants) * 4))
-    leaders = leader_schedule(
-        h, cfg.rounds, seed=cfg.seed, strategy=cfg.leader_strategy
-    )
-    acct = RDPAccountant(
-        sampling_rate=rate,
-        noise_multiplier=cfg.dp.noise_multiplier,
-        delta=cfg.dp.delta,
-    )
-    n_rounds = cfg.rounds
-    if cfg.epsilon_budget is not None:
-        from repro.core.accountant import steps_for_epsilon
-
-        n_rounds = min(
-            cfg.rounds,
-            steps_for_epsilon(rate, cfg.dp.noise_multiplier,
-                              cfg.epsilon_budget, cfg.dp.delta,
-                              max_steps=cfg.rounds + 1),
-        )
-
-    key = jax.random.key(cfg.seed)
-    params = model.init_fn(key)
-    rng = np.random.default_rng(cfg.seed)
-
-    clipped_sum = jax.jit(
-        lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
-            model.loss_fn, p, b,
-            clip_norm=cfg.dp.clip_norm,
-            microbatch_size=min(cfg.dp.microbatch_size, pad),
-            mask=m,
-        )
-    )
-
-    logs: list[RoundLog] = []
-    for t in range(n_rounds):
-        # Step 1: leader selection (bookkeeping under honest-but-curious).
-        leader = int(leaders[t])
-        # Step 2: each silo Poisson-samples with the shared global rate.
-        batches, masks, sizes = [], [], []
-        for part in participants:
-            b, m, k = _poisson_batch(rng, part, rate, pad)
-            batches.append(b)
-            masks.append(m)
-            sizes.append(k)
-        # Aggregate mini-batch size ||B^t|| via SecAgg (cost modelled; exact).
-        if cfg.use_secagg:
-            agg_size = secure_sum(
-                [jnp.asarray([float(s)]) for s in sizes],
-                SecAggConfig(h, frac_bits=0, seed=cfg.seed * 7919 + t),
-            )[0]
-            agg_batch = int(round(float(agg_size)))
-        else:
-            agg_batch = int(sum(sizes))
-        if agg_batch == 0:
-            logs.append(RoundLog(t, leader, float("nan"), acct.epsilon(), 0))
-            continue
-        # Step 3: local clip + per-participant noise shares.
-        shares, losses = [], []
-        for i, (b, m) in enumerate(zip(batches, masks)):
-            g_sum, loss = clipped_sum(params, b, jnp.asarray(m))
-            nkey = jax.random.fold_in(jax.random.fold_in(key, 17 + t), i)
-            g_noised = dp_lib.tree_add_noise(
-                g_sum, nkey, clip_norm=cfg.dp.clip_norm,
-                noise_multiplier=cfg.dp.noise_multiplier, n_shares=h,
-            )
-            shares.append(g_noised)
-            losses.append(float(loss))
-        # Steps 4-5: SecAgg the noised sums; leader computes the update.
-        if cfg.use_secagg:
-            total = secure_sum(
-                shares, SecAggConfig(h, cfg.secagg_frac_bits, seed=cfg.seed + t)
-            )
-        else:
-            total = jax.tree_util.tree_map(
-                lambda *xs: sum(xs[1:], xs[0]), *shares
-            )
-        grad = jax.tree_util.tree_map(lambda x: x / agg_batch, total)
-        params = _sgd_update(params, grad, cfg.lr, cfg.weight_decay)
-        # Step 6-7: everyone syncs with the leader; accountant advances.
-        acct.step()
-        logs.append(
-            RoundLog(t, leader, float(np.mean(losses)), acct.epsilon(), agg_batch)
-        )
-        if cfg.epsilon_budget is not None and acct.exceeds(cfg.epsilon_budget):
-            break
-    return RunResult(params, logs, acct.epsilon(), len(logs))
+def _run_ideal(arm_name: str, model: Model,
+               participants: Sequence[Participant],
+               cfg: ArmConfig) -> RunReport:
+    return LocalRunner().run(get(arm_name)(model, participants, cfg))
 
 
-def run_fl(
-    model: Model,
-    participants: Sequence[Participant],
-    cfg: FederationConfig,
-) -> RunResult:
-    """FL without DP (paper's non-private reference).
-
-    fl_local_steps == 1 -> FedSGD with DeCaPH's cadence (the paper's FL
-    comparison arm); > 1 -> FedAvg (McMahan et al.): each client takes k
-    local SGD steps per round and the server size-weights the weights.
-    """
-    h = len(participants)
-    n_total = sum(len(p) for p in participants)
-    rate = cfg.batch_size / n_total
-    pad = cfg.max_pad_batch or max(8, int(rate * max(len(p) for p in participants) * 4))
-    key = jax.random.key(cfg.seed)
-    params = model.init_fn(key)
-    rng = np.random.default_rng(cfg.seed)
-
-    def batch_grad(p, b, m):
-        def masked_loss(pp):
-            losses = jax.vmap(lambda ex: model.loss_fn(pp, ex))(b)
-            return jnp.sum(losses * m)
-        return jax.grad(masked_loss)(p)
-
-    batch_grad = jax.jit(batch_grad)
-    logs: list[RoundLog] = []
-    for t in range(cfg.rounds):
-        if cfg.fl_local_steps <= 1:  # FedSGD
-            grads, sizes = [], []
-            for part in participants:
-                b, m, k = _poisson_batch(rng, part, rate, pad)
-                grads.append(batch_grad(params, b, jnp.asarray(m)))
-                sizes.append(k)
-            agg = int(sum(sizes))
-            if agg == 0:
-                continue
-            total = jax.tree_util.tree_map(
-                lambda *xs: sum(xs[1:], xs[0]), *grads
-            )
-            grad = jax.tree_util.tree_map(lambda x: x / agg, total)
-            params = _sgd_update(params, grad, cfg.lr, cfg.weight_decay)
-        else:  # FedAvg: local epochs then size-weighted weight averaging
-            client_params, weights = [], []
-            for part in participants:
-                local = params
-                for _ in range(cfg.fl_local_steps):
-                    b, m, k = _poisson_batch(rng, part, rate, pad)
-                    if k == 0:
-                        continue
-                    g = batch_grad(local, b, jnp.asarray(m))
-                    g = jax.tree_util.tree_map(lambda x: x / max(k, 1), g)
-                    local = _sgd_update(local, g, cfg.lr, cfg.weight_decay)
-                client_params.append(local)
-                weights.append(len(part))
-            wsum = float(sum(weights))
-            params = jax.tree_util.tree_map(
-                lambda *xs: sum(w / wsum * x for w, x in zip(weights, xs)),
-                *client_params,
-            )
-            agg = cfg.batch_size
-        logs.append(RoundLog(t, t % h, float("nan"), 0.0, agg))
-    return RunResult(params, logs, 0.0, len(logs))
+def run_decaph(model, participants, cfg, *, eval_fn=None) -> RunResult:
+    """The DeCaPH protocol, Steps 1-7 of the paper (idealized backend)."""
+    _deprecated("run_decaph", "decaph")
+    return _run_ideal("decaph", model, participants, cfg)
 
 
-def run_primia(
-    model: Model,
-    participants: Sequence[Participant],
-    cfg: FederationConfig,
-) -> RunResult:
-    """PriMIA-style local-DP FL.
-
-    Every client runs DP-SGD *locally*: local Poisson rate B_h/|D_h| with the
-    same per-client mini-batch target, full noise N(0,(C sigma)^2) added by
-    each client (local DP), and a local accountant.  Clients stop contributing
-    once their own epsilon budget is spent — reproducing the paper's observed
-    failure mode (clients with fewer points drop out first when rates differ).
-    """
-    h = len(participants)
-    n_total = sum(len(p) for p in participants)
-    key = jax.random.key(cfg.seed)
-    params = model.init_fn(key)
-    rng = np.random.default_rng(cfg.seed)
-
-    per_client_batch = max(1, cfg.batch_size // h)
-    rates = [min(1.0, per_client_batch / max(len(p), 1)) for p in participants]
-    pads = [cfg.max_pad_batch or max(8, int(r * len(p) * 4) or 8)
-            for r, p in zip(rates, participants)]
-    accts = [
-        RDPAccountant(
-            sampling_rate=r, noise_multiplier=cfg.dp.noise_multiplier,
-            delta=cfg.dp.delta,
-        )
-        for r in rates
-    ]
-    budget = cfg.epsilon_budget or float("inf")
-    # A client participates only while ANOTHER step stays within its local
-    # budget (never overshoots) — clients with higher sampling rates (small
-    # silos) drop out first, the paper's PriMIA failure mode.
-    if cfg.epsilon_budget is not None:
-        from repro.core.accountant import steps_for_epsilon
-
-        max_rounds = [
-            steps_for_epsilon(r, cfg.dp.noise_multiplier, budget, cfg.dp.delta,
-                              max_steps=cfg.rounds + 1)
-            for r in rates
-        ]
-    else:
-        max_rounds = [cfg.rounds] * h
-
-    clipped_sum = jax.jit(
-        lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
-            model.loss_fn, p, b,
-            clip_norm=cfg.dp.clip_norm,
-            microbatch_size=cfg.dp.microbatch_size,
-            mask=m,
-        ),
-        static_argnames=(),
-    )
-
-    logs: list[RoundLog] = []
-    for t in range(cfg.rounds):
-        updates, sizes, active = [], [], 0
-        for i, part in enumerate(participants):
-            if accts[i].steps >= max_rounds[i]:
-                continue  # client's local budget exhausted -> drops out
-            active += 1
-            b, m, k = _poisson_batch(rng, part, rates[i], pads[i])
-            g_sum, _ = clipped_sum(params, b, jnp.asarray(m))
-            nkey = jax.random.fold_in(jax.random.fold_in(key, 31 + t), i)
-            # Local DP: the FULL noise per client (n_shares=1).
-            g = dp_lib.tree_add_noise(
-                g_sum, nkey, clip_norm=cfg.dp.clip_norm,
-                noise_multiplier=cfg.dp.noise_multiplier, n_shares=1,
-            )
-            g = jax.tree_util.tree_map(lambda x: x / max(k, 1), g)
-            updates.append(g)
-            sizes.append(k)
-            accts[i].step()
-        if not updates:
-            break
-        total = jax.tree_util.tree_map(lambda *xs: sum(xs[1:], xs[0]), *updates)
-        grad = jax.tree_util.tree_map(lambda x: x / len(updates), total)
-        params = _sgd_update(params, grad, cfg.lr, cfg.weight_decay)
-        eps = max(a.epsilon() for a in accts)
-        logs.append(RoundLog(t, t % h, float("nan"), eps, int(sum(sizes))))
-    eps = max(a.epsilon() for a in accts)
-    return RunResult(params, logs, eps, len(logs))
+def run_fl(model, participants, cfg) -> RunResult:
+    """FL without DP: FedSGD, or FedAvg when ``cfg.fl_local_steps > 1``."""
+    _deprecated("run_fl", "fl")
+    return _run_ideal("fl", model, participants, cfg)
 
 
-def run_local(
-    model: Model,
-    participants: Sequence[Participant],
-    cfg: FederationConfig,
-) -> RunResult:
-    """Silo-only baselines: one independent non-private model per hospital."""
-    per_client = []
-    rng = np.random.default_rng(cfg.seed)
-    for i, part in enumerate(participants):
-        key = jax.random.key(cfg.seed + i)
-        params = model.init_fn(key)
-        bs = min(cfg.batch_size, len(part))
+def run_primia(model, participants, cfg) -> RunResult:
+    """PriMIA-style local-DP FL with per-client accountants."""
+    _deprecated("run_primia", "primia")
+    return _run_ideal("primia", model, participants, cfg)
 
-        @jax.jit
-        def batch_grad(p, b):
-            def mean_loss(pp):
-                return jnp.mean(jax.vmap(lambda ex: model.loss_fn(pp, ex))(b))
-            return jax.grad(mean_loss)(p)
 
-        for t in range(cfg.rounds):
-            idx = rng.choice(len(part), size=bs, replace=False)
-            b = {"x": jnp.asarray(part.x[idx]), "y": jnp.asarray(part.y[idx])}
-            g = batch_grad(params, b)
-            params = _sgd_update(params, g, cfg.lr, cfg.weight_decay)
-        per_client.append(params)
-    return RunResult(per_client[0], [], 0.0, cfg.rounds, per_client_params=per_client)
+def run_local(model, participants, cfg) -> RunResult:
+    """Silo-only baselines: one independent non-private model per silo."""
+    _deprecated("run_local", "local")
+    return _run_ideal("local", model, participants, cfg)
 
 
 def run_pate(
     model: Model,
     participants: Sequence[Participant],
-    cfg: FederationConfig,
+    cfg: ArmConfig,
     *,
     public_x: np.ndarray,
     n_classes: int = 2,
@@ -422,25 +108,26 @@ def run_pate(
 ) -> RunResult:
     """PATE/GNMax baseline (paper Supplementary, "Existing frameworks").
 
-    Each hospital trains a local teacher; a student is trained on public
-    data labelled by the noisy argmax of teacher votes.  The paper argues
-    this class of frameworks needs (a) a public dataset and (b) MANY
-    teachers to get good labels at reasonable ε — with 3-8 hospitals the
-    vote margin is tiny, so utility collapses; this runner exists to make
-    that argument measurable (benchmarks/pate_ablation.py).
+    Each hospital trains a local teacher (the ``local`` arm); a student is
+    trained on public data labelled by the noisy argmax of teacher votes.
+    The paper argues this class of frameworks needs (a) a public dataset and
+    (b) MANY teachers to get good labels at reasonable ε — with 3-8
+    hospitals the vote margin is tiny, so utility collapses; this runner
+    exists to make that argument measurable (benchmarks/pate_ablation.py).
 
     ε accounting: each query is a Gaussian mechanism with per-teacher
     sensitivity 1 → RDP(α) = α/(2 σ²) per query, composed over queries
     (data-independent bound; the tighter data-dependent PATE analysis only
     helps with large teacher ensembles).
-    """
-    import math as _math
 
+    Not a registered arm and not deprecated: it is a one-shot pipeline over
+    the ``local`` arm, not a per-round protocol, so it has no meaningful
+    sim-backend story and this remains its canonical entry point.
+    """
     from repro.core.accountant import DEFAULT_ORDERS, rdp_to_eps_delta
 
-    # 1) local teachers (silo-only training)
-    teachers = run_local(model, participants, cfg).per_client_params
-    h = len(teachers)
+    # 1) local teachers (silo-only training via the registered arm)
+    teachers = _run_ideal("local", model, participants, cfg).per_node_params
 
     # 2) noisy-vote labelling of the public pool
     rng = np.random.default_rng(cfg.seed)
@@ -462,8 +149,11 @@ def run_pate(
 
     # 4) student trained on the noisy labels (plain SGD; labels are public)
     student = Participant(public_x.astype(np.float32), labels)
-    res = run_local(model, [student], cfg)
-    return RunResult(res.per_client_params[0], [], float(eps), cfg.rounds)
+    res = _run_ideal("local", model, [student], cfg)
+    return RunResult(
+        params=res.per_node_params[0], logs=[], epsilon=float(eps),
+        rounds_completed=cfg.rounds, arm="pate", backend="ideal",
+    )
 
 
 RUNNERS = {

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.federation import Participant
+from repro.arms.base import Participant
 
 
 def sized_partition(x, y, proportions, seed: int = 0) -> list[Participant]:

@@ -22,7 +22,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.federation import Participant
+from repro.arms.base import Participant
 
 
 def _latent_binary_task(rng, n, d_feat, d_latent, w_scale=1.0):

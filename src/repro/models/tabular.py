@@ -16,7 +16,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.federation import Model
+from repro.arms.base import Model
 
 
 def _dense_init(key, d_in, d_out):

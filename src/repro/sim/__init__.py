@@ -1,10 +1,19 @@
 """repro.sim — discrete-event multi-hospital simulator.
 
-Answers the systems questions the idealized ``repro.core.federation``
-runtimes cannot: simulated wall-clock under heterogeneous compute,
-bytes-on-wire per protocol, straggler sensitivity, and dropout recovery —
-while running the real training numerics, so utility/epsilon come out of the
-same run.  See DESIGN.md ("Discrete-event simulator") for the event model.
+Answers the systems questions the idealized runtime cannot: simulated
+wall-clock under heterogeneous compute, bytes-on-wire per protocol,
+straggler sensitivity, and dropout recovery — while running the real
+training numerics, so utility/epsilon come out of the same run.  See
+DESIGN.md §4 for the event model and §5 for the Arm/Backend contract.
+
+Since the Arm/Backend redesign the per-arm numerics live in ``repro.arms``
+and the event-driven execution in ``repro.arms.SimRunner``; this package
+keeps the engine (events, clock), the systems models (nodes, topology), and
+deprecated ``simulate_*`` shims for pre-refactor callers.
+
+Implementation note: the protocol names are loaded lazily (PEP 562) because
+``repro.arms`` — which ``protocols`` imports — itself imports the engine
+from this package; eager loading would be a circular import.
 """
 
 from repro.sim.engine import (
@@ -20,38 +29,41 @@ from repro.sim.nodes import (
     node_from_trace,
     nodes_from_trace,
 )
-from repro.sim.protocols import (
-    ArmReport,
-    SIM_RUNNERS,
-    SimConfig,
-    scenario_from_trace,
-    simulate_decaph,
-    simulate_fl,
-    simulate_gossip,
-    simulate_local,
-    simulate_primia,
-)
 from repro.sim.topology import Link, Topology
 
-__all__ = [
+_PROTOCOL_NAMES = (
     "ArmReport",
+    "SIM_RUNNERS",
+    "SimConfig",
+    "scenario_from_trace",
+    "simulate_decaph",
+    "simulate_fl",
+    "simulate_gossip",
+    "simulate_gossip_dp",
+    "simulate_local",
+    "simulate_primia",
+)
+
+
+def __getattr__(name: str):
+    if name in _PROTOCOL_NAMES:
+        from repro.sim import protocols
+
+        return getattr(protocols, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
     "ComputeDone",
     "EventEngine",
     "HospitalNode",
     "Link",
     "NodeDropout",
     "NodeRejoin",
-    "SIM_RUNNERS",
-    "SimConfig",
     "Topology",
     "TransferDone",
     "heterogeneous_trace",
     "node_from_trace",
     "nodes_from_trace",
-    "scenario_from_trace",
-    "simulate_decaph",
-    "simulate_fl",
-    "simulate_gossip",
-    "simulate_local",
-    "simulate_primia",
+    *_PROTOCOL_NAMES,
 ]

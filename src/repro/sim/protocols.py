@@ -1,843 +1,97 @@
-"""Protocol adapters: the paper's arms under simulated time + async gossip.
+"""Deprecated per-arm simulator entry points (now thin Arm/Backend shims).
 
-Each ``simulate_*`` runner drives *real* training numerics (the same DP
-mechanics, SecAgg field arithmetic and SGD updates as
-``repro.core.federation``) through the discrete-event engine, so the report
-carries simulated wall-clock and bytes-on-wire **and** genuine
-utility/epsilon — including the effect of injected dropouts on what actually
-gets aggregated.
+Pre-refactor this module re-implemented every arm's training numerics a
+second time for simulated execution (~850 lines).  Since the Arm/Backend
+redesign the numerics live once in ``repro.arms`` and the discrete-event
+execution lives in ``repro.arms.SimRunner``; each ``simulate_*`` below just
+binds a registered arm to that backend.  New code should use::
 
-Arms:
-  * ``decaph`` — synchronous rounds, rotating leader, dropout-robust SecAgg:
-    a hospital dropping mid-round triggers real Shamir mask recovery
-    (``repro.core.secagg.DropoutRobustSession``), and the round's aggregate
-    equals the plain sum of the survivors' noised gradients.
-  * ``fl``     — FedSGD through a star hub (the server-based baseline).
-  * ``primia`` — local-DP FL through the star hub; per-client accountants,
-    budget-exhausted clients stop computing (distinct from availability
-    dropouts).
-  * ``local``  — silo-only training; zero bytes on wire; wall-clock is the
-    slowest hospital's compute, stretched by its offline windows.
-  * ``gossip`` — asynchronous D-PSGD (Lian et al. 2018 style): no global
-    rounds; each node alternates local SGD steps with pairwise model
-    averaging over its topology neighbours, communication overlapping
-    compute.  Non-private (like the ``fl`` arm) — it is the systems
-    baseline decentralised ML usually gets compared against.
+    import repro.arms as arms
+    report = arms.run("decaph", model, silos, cfg, backend="sim",
+                      nodes=nodes, topo=topo)
 
-Known simplifications (recorded in DESIGN.md): the per-round facilitator is
-assumed reliable while facilitating (a leader dropping mid-round voids the
-round, it is not re-elected mid-round); noise shares are sized for the
-round-start active set, so a mid-round dropout leaves the round marginally
-under-noised (conservative accounting would scale shares up).
+``SimConfig`` is an alias of :class:`repro.arms.ArmConfig` and ``ArmReport``
+of :class:`repro.arms.RunReport` (unified result type; the systems metrics
+live in its ``timing`` section and remain readable under their historical
+names — ``wall_clock``, ``bytes_on_wire``, ``recoveries``, ...).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Any, Callable, Sequence
+import warnings
+from typing import Callable, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import dp as dp_lib
-from repro.core.accountant import RDPAccountant
-from repro.core.federation import (
-    Model,
-    Participant,
-    _poisson_batch,
-    _sgd_update,
-)
-from repro.core.leader import leader_schedule
-from repro.core.secagg import (
-    DropoutRobustSession,
-    SecAggConfig,
-    secagg_recovery_bytes,
-)
-from repro.sim.engine import (
-    ComputeDone,
-    EventEngine,
-    NodeDropout,
-    NodeRejoin,
-    TransferDone,
-)
+from repro.arms import ArmConfig, RunReport, SimRunner, get
+from repro.arms.base import Model, Participant  # noqa: F401  (legacy re-export)
 from repro.sim.nodes import HospitalNode, nodes_from_trace
 from repro.sim.topology import Topology
 
-PyTree = Any
+__all__ = [
+    "ArmReport",
+    "SIM_RUNNERS",
+    "SimConfig",
+    "scenario_from_trace",
+    "simulate_decaph",
+    "simulate_fl",
+    "simulate_gossip",
+    "simulate_gossip_dp",
+    "simulate_local",
+    "simulate_primia",
+]
 
-_SHARE_BYTES = 16.0  # one Shamir share on the wire (index + 61-bit y)
+# Legacy aliases — historical names for the unified types.
+ArmReport = RunReport
 
 
 @dataclasses.dataclass
-class SimConfig:
-    """Training + systems knobs for one simulated run."""
+class SimConfig(ArmConfig):
+    """Legacy name for :class:`repro.arms.ArmConfig`.
+
+    Only difference: the historical default of 20 rounds (ArmConfig keeps
+    FederationConfig's 100), so pre-refactor ``SimConfig()`` callers do not
+    silently get a 5x longer simulation.
+    """
 
     rounds: int = 20
-    batch_size: int = 64
-    lr: float = 0.1
-    weight_decay: float = 0.0
-    dp: dp_lib.DPConfig = dataclasses.field(default_factory=dp_lib.DPConfig)
-    use_secagg: bool = True
-    secagg_frac_bits: int = 16
-    secagg_threshold: int | None = None  # None -> majority of round's cohort
-    leader_strategy: str = "uniform"
-    seed: int = 0
-    bytes_per_param: float = 4.0
-    max_pad_batch: int | None = None
-    # gossip arm
-    gossip_steps: int | None = None  # local steps per node; None -> rounds
-    gossip_every: int = 1            # exchange after every k-th local step
-    fl_server: int = 0               # star hub for fl/primia
-    epsilon_budget: float | None = None
 
 
-@dataclasses.dataclass
-class ArmReport:
-    """What ``benchmarks/sim_report.py`` tabulates per arm."""
-
-    arm: str
-    wall_clock: float          # simulated seconds
-    bytes_on_wire: float
-    rounds_completed: int
-    epsilon: float
-    params: PyTree
-    per_node_params: list[PyTree] | None = None
-    dropout_events: int = 0    # NodeDropout events that fired
-    recoveries: int = 0        # SecAgg Shamir recoveries performed
-    lost_rounds: int = 0       # rounds voided (leader dropped / empty batch)
-    events: int = 0            # engine events processed
-
-
-# -- shared machinery -------------------------------------------------------
-
-
-def _tree_bytes(tree: PyTree, bytes_per_param: float) -> float:
-    return bytes_per_param * sum(
-        int(np.prod(np.shape(leaf)) or 1)
-        for leaf in jax.tree_util.tree_leaves(tree)
-    )
-
-
-def _schedule_availability(engine: EventEngine, nodes: Sequence[HospitalNode]) -> None:
-    for node in nodes:
-        for t_off, t_on in node.dropouts:
-            engine.schedule_at(t_off, NodeDropout(node.index))
-            if t_on is not None:
-                engine.schedule_at(t_on, NodeRejoin(node.index))
-
-
-def _apply_availability(nodes: Sequence[HospitalNode], ev) -> bool:
-    """Handle dropout/rejoin events; True if ``ev`` was one of them."""
-    if isinstance(ev, NodeDropout):
-        nodes[ev.node].online = False
-        return True
-    if isinstance(ev, NodeRejoin):
-        nodes[ev.node].online = True
-        return True
-    return False
-
-
-# Every gather/broadcast stamps its events with a unique tag.  Events from a
-# voided round can outlive the round (a dropped node's in-flight upload); the
-# tag match keeps them from being mistaken for the current round's traffic.
-_tag_counter = itertools.count()
-
-
-def _gather_round(
-    engine: EventEngine,
-    nodes: Sequence[HospitalNode],
-    topo: Topology,
-    dst: int,
-    work: dict[int, tuple[Any, float, float]],
-) -> tuple[dict[int, Any], set[int], float, int]:
-    """One synchronous gather: every node computes, then uploads to ``dst``.
-
-    ``work[i] = (payload, compute_seconds, nbytes)``.  Returns
-    ``(delivered, dropped_mid_round, bytes_on_wire, dropout_events)``.
-    A node whose NodeDropout fires before its upload lands is excluded from
-    ``delivered`` — exactly the case SecAgg recovery must handle.
-    """
-    tag = f"sync-{next(_tag_counter)}"
-    pending = set(work)
-    delivered: dict[int, Any] = {}
-    dropped_mid: set[int] = set()
-    inflight: dict[int, int] = {}  # node -> cancel handle of its next event
-    wire = 0.0
-    n_drop_events = 0
-    for i, (payload, compute_s, nbytes) in work.items():
-        inflight[i] = engine.schedule(
-            compute_s, ComputeDone(i, tag=tag, payload=(payload, nbytes))
+def _simulate(arm_name: str):
+    def shim(
+        model: Model,
+        participants: Sequence[Participant],
+        nodes: Sequence[HospitalNode],
+        topo: Topology,
+        cfg: ArmConfig,
+    ) -> RunReport:
+        warnings.warn(
+            f"repro.sim.protocols.simulate_{arm_name.replace('-', '_')} is "
+            f"deprecated; use repro.arms.run({arm_name!r}, ..., "
+            "backend='sim', nodes=..., topo=...)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-    while pending:
-        ev = engine.pop()
-        if ev is None:
-            break
-        if _apply_availability(nodes, ev):
-            if isinstance(ev, NodeDropout):
-                n_drop_events += 1
-                if ev.node in pending:
-                    pending.discard(ev.node)
-                    dropped_mid.add(ev.node)
-                    # the dropout kills the compute / connection: its upload
-                    # must never arrive, so the leader never holds both a
-                    # "dropped" ciphertext and its reconstructed pads
-                    handle = inflight.pop(ev.node, None)
-                    if handle is not None:
-                        engine.cancel(handle)
-            continue
-        if isinstance(ev, ComputeDone) and ev.tag == tag:
-            if not nodes[ev.node].online:
-                continue  # dropped during compute; already counted
-            payload, nbytes = ev.payload
-            if ev.node == dst:
-                delivered[ev.node] = payload
-                pending.discard(ev.node)
-                inflight.pop(ev.node, None)
-            else:
-                wire += nbytes
-                inflight[ev.node] = engine.schedule(
-                    topo.transfer_time(ev.node, dst, nbytes),
-                    TransferDone(ev.node, dst, nbytes, tag=tag, payload=payload),
-                )
-        elif isinstance(ev, TransferDone) and ev.tag == tag:
-            if ev.src in pending:
-                delivered[ev.src] = ev.payload
-                pending.discard(ev.src)
-                inflight.pop(ev.src, None)
-    return delivered, dropped_mid, wire, n_drop_events
+        return SimRunner(nodes, topo).run(get(arm_name)(model, participants, cfg))
+
+    shim.__name__ = f"simulate_{arm_name.replace('-', '_')}"
+    shim.__qualname__ = shim.__name__
+    return shim
 
 
-def _broadcast(
-    engine: EventEngine,
-    nodes: Sequence[HospitalNode],
-    topo: Topology,
-    src: int,
-    nbytes: float,
-    targets: Sequence[int],
-) -> tuple[float, int]:
-    """Send ``nbytes`` from ``src`` to each online target; barrier on arrival."""
-    tag = f"bcast-{next(_tag_counter)}"
-    outstanding = 0
-    wire = 0.0
-    n_drop_events = 0
-    for j in targets:
-        if j == src or not nodes[j].online:
-            continue
-        wire += nbytes
-        outstanding += 1
-        engine.schedule(
-            topo.transfer_time(src, j, nbytes),
-            TransferDone(src, j, nbytes, tag=tag),
-        )
-    while outstanding:
-        ev = engine.pop()
-        if ev is None:
-            break
-        if _apply_availability(nodes, ev):
-            n_drop_events += isinstance(ev, NodeDropout)
-            continue
-        if isinstance(ev, TransferDone) and ev.tag == tag:
-            outstanding -= 1
-    return wire, n_drop_events
+simulate_decaph = _simulate("decaph")
+simulate_fl = _simulate("fl")
+simulate_primia = _simulate("primia")
+simulate_local = _simulate("local")
+simulate_gossip = _simulate("gossip")
+simulate_gossip_dp = _simulate("gossip-dp")
 
-
-def _advance_to_quorum(
-    engine: EventEngine,
-    nodes: Sequence[HospitalNode],
-    minimum: int,
-    require: int | None = None,
-) -> tuple[int, int]:
-    """Fast-forward through availability events until >= minimum online
-    (and, if given, node ``require`` — e.g. the star hub — is online)."""
-    n_drop_events = 0
-    while (
-        sum(n.online for n in nodes) < minimum
-        or (require is not None and not nodes[require].online)
-    ):
-        ev = engine.pop()
-        if ev is None:
-            return n_drop_events, 0
-        if _apply_availability(nodes, ev):
-            n_drop_events += isinstance(ev, NodeDropout)
-    return n_drop_events, 1
-
-
-# -- decaph -----------------------------------------------------------------
-
-
-def simulate_decaph(
-    model: Model,
-    participants: Sequence[Participant],
-    nodes: Sequence[HospitalNode],
-    topo: Topology,
-    cfg: SimConfig,
-) -> ArmReport:
-    """DeCaPH rounds under simulated time with dropout-robust SecAgg."""
-    h = len(participants)
-    if len(nodes) != h:
-        raise ValueError("one HospitalNode per participant required")
-    n_total = sum(len(p) for p in participants)
-    rate = cfg.batch_size / n_total
-    pad = cfg.max_pad_batch or max(
-        8, int(rate * max(len(p) for p in participants) * 4)
-    )
-    leaders = leader_schedule(
-        h, cfg.rounds, seed=cfg.seed, strategy=cfg.leader_strategy
-    )
-    acct = RDPAccountant(
-        sampling_rate=rate,
-        noise_multiplier=cfg.dp.noise_multiplier,
-        delta=cfg.dp.delta,
-    )
-    key = jax.random.key(cfg.seed)
-    params = model.init_fn(key)
-    rng = np.random.default_rng(cfg.seed)
-    model_bytes = _tree_bytes(params, cfg.bytes_per_param)
-
-    clipped_sum = jax.jit(
-        lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
-            model.loss_fn, p, b,
-            clip_norm=cfg.dp.clip_norm,
-            microbatch_size=min(cfg.dp.microbatch_size, pad),
-            mask=m,
-        )
-    )
-
-    engine = EventEngine()
-    _schedule_availability(engine, nodes)
-    wire = 0.0
-    dropouts = recoveries = lost = completed = 0
-
-    # a round needs at least the configured reconstruction threshold online;
-    # running below it would silently weaken the operator's security choice
-    quorum = max(2, cfg.secagg_threshold or 2) if cfg.use_secagg else 2
-    for t in range(cfg.rounds):
-        d, ok = _advance_to_quorum(engine, nodes, quorum)
-        dropouts += d
-        if not ok:
-            break  # quorum never reachable again
-        active = [i for i in range(h) if nodes[i].online]
-        leader = int(leaders[t])
-        if leader not in active:
-            # shared-seed schedule: everyone deterministically skips to the
-            # next online hospital
-            leader = active[t % len(active)]
-
-        # local compute: Poisson batch, clip, per-participant noise share
-        shares: dict[int, PyTree] = {}
-        sizes: dict[int, int] = {}
-        for i in active:
-            b, m, k = _poisson_batch(rng, participants[i], rate, pad)
-            g_sum, _ = clipped_sum(params, b, jnp.asarray(m))
-            nkey = jax.random.fold_in(jax.random.fold_in(key, 17 + t), i)
-            shares[i] = dp_lib.tree_add_noise(
-                g_sum, nkey, clip_norm=cfg.dp.clip_norm,
-                noise_multiplier=cfg.dp.noise_multiplier,
-                n_shares=len(active),
-            )
-            sizes[i] = k
-
-        session = None
-        if cfg.use_secagg:
-            n_active = len(active)
-            # quorum above guarantees n_active >= any configured threshold
-            threshold = cfg.secagg_threshold or (n_active // 2 + 1)
-            session = DropoutRobustSession(
-                SecAggConfig(n_active, cfg.secagg_frac_bits,
-                             seed=cfg.seed * 6007 + t),
-                params, threshold=threshold,
-            )
-            wire += secagg_recovery_bytes(n_active)["setup_bytes"]
-
-        work = {}
-        for slot, i in enumerate(active):
-            payload = (
-                session.upload(slot, shares[i]) if session else shares[i]
-            )
-            work[i] = (
-                (slot, payload, sizes[i]),
-                nodes[i].compute_time(sizes[i]),
-                model_bytes,
-            )
-        delivered, dropped_mid, w, d = _gather_round(
-            engine, nodes, topo, leader, work
-        )
-        wire += w
-        dropouts += d
-        if leader in dropped_mid or leader not in delivered:
-            lost += 1
-            continue  # facilitator died mid-round; round is void
-        agg_batch = sum(k for (_, _, k) in delivered.values())
-        if agg_batch == 0:
-            lost += 1  # empty Poisson draw; matches federation (no step)
-            continue
-        if session is not None:
-            uploads = {slot: up for (slot, up, _) in delivered.values()}
-            if len(uploads) < session.threshold:
-                lost += 1
-                continue  # below recovery threshold: protocol aborts round
-            if dropped_mid:
-                # survivors reveal shares of each dropped secret to the leader
-                recoveries += len(dropped_mid)
-                share_bytes = (
-                    secagg_recovery_bytes(len(active), len(dropped_mid))
-                    ["recovery_bytes"]
-                )
-                wire += share_bytes
-                # time cost of the share gather (tiny messages, latency-bound)
-                stag = f"shares-{next(_tag_counter)}"
-                surv = [i for i in delivered if i != leader]
-                for j in surv:
-                    engine.schedule(
-                        topo.transfer_time(j, leader, _SHARE_BYTES),
-                        TransferDone(j, leader, _SHARE_BYTES, tag=stag),
-                    )
-                outstanding = len(surv)
-                while outstanding:
-                    ev = engine.pop()
-                    if ev is None:
-                        break
-                    if _apply_availability(nodes, ev):
-                        dropouts += isinstance(ev, NodeDropout)
-                        continue
-                    if isinstance(ev, TransferDone) and ev.tag == stag:
-                        outstanding -= 1
-            total = session.aggregate(uploads)
-        else:
-            trees = [v for (_, v, _) in delivered.values()]
-            total = jax.tree_util.tree_map(
-                lambda *xs: sum(xs[1:], xs[0]), *trees
-            )
-        grad = jax.tree_util.tree_map(lambda x: x / agg_batch, total)
-        params = _sgd_update(params, grad, cfg.lr, cfg.weight_decay)
-        w, d = _broadcast(
-            engine, nodes, topo, leader, model_bytes,
-            [i for i in range(h) if nodes[i].online],
-        )
-        wire += w
-        dropouts += d
-        acct.step()
-        completed += 1
-        if cfg.epsilon_budget is not None and acct.exceeds(cfg.epsilon_budget):
-            break
-
-    return ArmReport(
-        arm="decaph", wall_clock=engine.now, bytes_on_wire=wire,
-        rounds_completed=completed, epsilon=acct.epsilon(), params=params,
-        dropout_events=dropouts, recoveries=recoveries, lost_rounds=lost,
-        events=engine.processed,
-    )
-
-
-# -- fl / primia (star hub) -------------------------------------------------
-
-
-def simulate_fl(
-    model: Model,
-    participants: Sequence[Participant],
-    nodes: Sequence[HospitalNode],
-    topo: Topology,
-    cfg: SimConfig,
-) -> ArmReport:
-    """FedSGD through a star hub under simulated time (non-private)."""
-    h = len(participants)
-    n_total = sum(len(p) for p in participants)
-    rate = cfg.batch_size / n_total
-    pad = cfg.max_pad_batch or max(
-        8, int(rate * max(len(p) for p in participants) * 4)
-    )
-    key = jax.random.key(cfg.seed)
-    params = model.init_fn(key)
-    rng = np.random.default_rng(cfg.seed)
-    model_bytes = _tree_bytes(params, cfg.bytes_per_param)
-    server = cfg.fl_server
-
-    def batch_grad(p, b, m):
-        def masked_loss(pp):
-            losses = jax.vmap(lambda ex: model.loss_fn(pp, ex))(b)
-            return jnp.sum(losses * m)
-        return jax.grad(masked_loss)(p)
-
-    batch_grad = jax.jit(batch_grad)
-
-    engine = EventEngine()
-    _schedule_availability(engine, nodes)
-    wire = 0.0
-    dropouts = lost = completed = 0
-    for t in range(cfg.rounds):
-        # server-based FL stalls whenever the hub is offline
-        d, ok = _advance_to_quorum(engine, nodes, 1, require=server)
-        dropouts += d
-        if not ok:
-            break
-        active = [i for i in range(h) if nodes[i].online]
-        work = {}
-        for i in active:
-            b, m, k = _poisson_batch(rng, participants[i], rate, pad)
-            g = batch_grad(params, b, jnp.asarray(m))
-            work[i] = ((g, k), nodes[i].compute_time(k), model_bytes)
-        delivered, dropped_mid, w, d = _gather_round(
-            engine, nodes, topo, server, work
-        )
-        wire += w
-        dropouts += d
-        if server in dropped_mid or not nodes[server].online:
-            lost += 1
-            continue  # hub died mid-round; no aggregation happened
-        agg = sum(k for (_, k) in delivered.values())
-        if not delivered or agg == 0:
-            lost += 1
-            continue
-        total = jax.tree_util.tree_map(
-            lambda *xs: sum(xs[1:], xs[0]),
-            *[g for (g, _) in delivered.values()],
-        )
-        grad = jax.tree_util.tree_map(lambda x: x / agg, total)
-        params = _sgd_update(params, grad, cfg.lr, cfg.weight_decay)
-        w, d = _broadcast(
-            engine, nodes, topo, server, model_bytes,
-            [i for i in range(h) if nodes[i].online],
-        )
-        wire += w
-        dropouts += d
-        completed += 1
-    return ArmReport(
-        arm="fl", wall_clock=engine.now, bytes_on_wire=wire,
-        rounds_completed=completed, epsilon=0.0, params=params,
-        dropout_events=dropouts, lost_rounds=lost, events=engine.processed,
-    )
-
-
-def simulate_primia(
-    model: Model,
-    participants: Sequence[Participant],
-    nodes: Sequence[HospitalNode],
-    topo: Topology,
-    cfg: SimConfig,
-) -> ArmReport:
-    """Local-DP FL (PriMIA) through the star hub under simulated time."""
-    h = len(participants)
-    key = jax.random.key(cfg.seed)
-    params = model.init_fn(key)
-    rng = np.random.default_rng(cfg.seed)
-    model_bytes = _tree_bytes(params, cfg.bytes_per_param)
-    server = cfg.fl_server
-
-    per_client_batch = max(1, cfg.batch_size // h)
-    rates = [min(1.0, per_client_batch / max(len(p), 1)) for p in participants]
-    pads = [cfg.max_pad_batch or max(8, int(r * len(p) * 4) or 8)
-            for r, p in zip(rates, participants)]
-    accts = [
-        RDPAccountant(sampling_rate=r, noise_multiplier=cfg.dp.noise_multiplier,
-                      delta=cfg.dp.delta)
-        for r in rates
-    ]
-    if cfg.epsilon_budget is not None:
-        from repro.core.accountant import steps_for_epsilon
-
-        max_rounds = [
-            steps_for_epsilon(r, cfg.dp.noise_multiplier, cfg.epsilon_budget,
-                              cfg.dp.delta, max_steps=cfg.rounds + 1)
-            for r in rates
-        ]
-    else:
-        max_rounds = [cfg.rounds] * h
-
-    clipped_sum = jax.jit(
-        lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
-            model.loss_fn, p, b,
-            clip_norm=cfg.dp.clip_norm,
-            microbatch_size=cfg.dp.microbatch_size,
-            mask=m,
-        )
-    )
-
-    engine = EventEngine()
-    _schedule_availability(engine, nodes)
-    wire = 0.0
-    dropouts = lost = completed = 0
-    for t in range(cfg.rounds):
-        # server-based FL stalls whenever the hub is offline
-        d, ok = _advance_to_quorum(engine, nodes, 1, require=server)
-        dropouts += d
-        if not ok:
-            break
-        active = [
-            i for i in range(h)
-            if nodes[i].online and accts[i].steps < max_rounds[i]
-        ]
-        if not active:
-            break  # every client's local budget exhausted
-        work = {}
-        for i in active:
-            b, m, k = _poisson_batch(rng, participants[i], rates[i], pads[i])
-            g_sum, _ = clipped_sum(params, b, jnp.asarray(m))
-            nkey = jax.random.fold_in(jax.random.fold_in(key, 31 + t), i)
-            g = dp_lib.tree_add_noise(
-                g_sum, nkey, clip_norm=cfg.dp.clip_norm,
-                noise_multiplier=cfg.dp.noise_multiplier, n_shares=1,
-            )
-            g = jax.tree_util.tree_map(lambda x: x / max(k, 1), g)
-            work[i] = (g, nodes[i].compute_time(k), model_bytes)
-            accts[i].step()
-        delivered, dropped_mid, w, d = _gather_round(
-            engine, nodes, topo, server, work
-        )
-        wire += w
-        dropouts += d
-        if server in dropped_mid or not nodes[server].online:
-            lost += 1
-            continue  # hub died mid-round; no aggregation happened
-        if not delivered:
-            lost += 1
-            continue
-        total = jax.tree_util.tree_map(
-            lambda *xs: sum(xs[1:], xs[0]), *delivered.values()
-        )
-        grad = jax.tree_util.tree_map(lambda x: x / len(delivered), total)
-        params = _sgd_update(params, grad, cfg.lr, cfg.weight_decay)
-        w, d = _broadcast(
-            engine, nodes, topo, server, model_bytes,
-            [i for i in range(h) if nodes[i].online],
-        )
-        wire += w
-        dropouts += d
-        completed += 1
-    eps = max(a.epsilon() for a in accts)
-    return ArmReport(
-        arm="primia", wall_clock=engine.now, bytes_on_wire=wire,
-        rounds_completed=completed, epsilon=eps, params=params,
-        dropout_events=dropouts, lost_rounds=lost, events=engine.processed,
-    )
-
-
-# -- local ------------------------------------------------------------------
-
-
-def simulate_local(
-    model: Model,
-    participants: Sequence[Participant],
-    nodes: Sequence[HospitalNode],
-    topo: Topology,
-    cfg: SimConfig,
-) -> ArmReport:
-    """Silo-only training: zero communication; offline windows stall a silo.
-
-    A round interrupted by a dropout is redone after rejoin (the checkpoint
-    story is out of scope), so a flaky hospital's wall-clock stretches by
-    its offline time plus the wasted partial rounds.
-    """
-    h = len(participants)
-    engine = EventEngine()
-    _schedule_availability(engine, nodes)
-
-    rng = np.random.default_rng(cfg.seed)
-    per_node_params: list[PyTree] = [
-        model.init_fn(jax.random.key(cfg.seed + i)) for i in range(h)
-    ]
-    batch_sizes: list[int] = [
-        min(cfg.batch_size, len(part)) for part in participants
-    ]
-
-    @jax.jit
-    def batch_grad(p, b):
-        def mean_loss(pp):
-            return jnp.mean(jax.vmap(lambda ex: model.loss_fn(pp, ex))(b))
-        return jax.grad(mean_loss)(p)
-
-    remaining = [cfg.rounds] * h
-    parked = [False] * h
-
-    def start_round(i: int) -> None:
-        engine.schedule(
-            nodes[i].compute_time(batch_sizes[i]), ComputeDone(i, tag="local")
-        )
-
-    def handler(ev) -> None:
-        if isinstance(ev, NodeDropout):
-            nodes[ev.node].online = False
-            return
-        if isinstance(ev, NodeRejoin):
-            nodes[ev.node].online = True
-            if parked[ev.node] and remaining[ev.node] > 0:
-                parked[ev.node] = False
-                start_round(ev.node)
-            return
-        if isinstance(ev, ComputeDone) and ev.tag == "local":
-            i = ev.node
-            if not nodes[i].online:
-                parked[i] = True  # round lost; redo after rejoin
-                return
-            part, bs = participants[i], batch_sizes[i]
-            idx = rng.choice(len(part), size=bs, replace=False)
-            b = {"x": jnp.asarray(part.x[idx]), "y": jnp.asarray(part.y[idx])}
-            g = batch_grad(per_node_params[i], b)
-            per_node_params[i] = _sgd_update(
-                per_node_params[i], g, cfg.lr, cfg.weight_decay
-            )
-            remaining[i] -= 1
-            if remaining[i] > 0:
-                start_round(i)
-
-    finish_times = [0.0] * h
-    for i in range(h):
-        if nodes[i].online:
-            start_round(i)
-        else:
-            parked[i] = True
-    while any(r > 0 for r in remaining):
-        ev = engine.pop()
-        if ev is None:
-            break
-        handler(ev)
-        if isinstance(ev, ComputeDone):
-            finish_times[ev.node] = engine.now
-    return ArmReport(
-        arm="local", wall_clock=max(finish_times) if finish_times else 0.0,
-        bytes_on_wire=0.0, rounds_completed=cfg.rounds - max(remaining),
-        epsilon=0.0,
-        params=per_node_params[0], per_node_params=per_node_params,
-        events=engine.processed,
-    )
-
-
-# -- async gossip (D-PSGD) --------------------------------------------------
-
-
-def simulate_gossip(
-    model: Model,
-    participants: Sequence[Participant],
-    nodes: Sequence[HospitalNode],
-    topo: Topology,
-    cfg: SimConfig,
-) -> ArmReport:
-    """Asynchronous gossip D-PSGD: local SGD + pairwise averaging, no rounds.
-
-    Each node loops: one local SGD step on its own shard, then (every
-    ``gossip_every`` steps) ships its model to one topology neighbour,
-    round-robin.  On arrival, sender and receiver atomically set both their
-    models to the average (the AD-PSGD idealisation; we charge the wire for
-    both directions).  Communication overlaps compute — the node starts its
-    next local step without waiting for the transfer — which is exactly the
-    straggler-tolerance the synchronous arms lack.
-    """
-    h = len(participants)
-    key = jax.random.key(cfg.seed)
-    per_node_params = [
-        model.init_fn(jax.random.fold_in(key, i)) for i in range(h)
-    ]
-    model_bytes = _tree_bytes(per_node_params[0], cfg.bytes_per_param)
-    total_steps = cfg.gossip_steps or cfg.rounds
-    rngs = [np.random.default_rng(cfg.seed * 100_003 + i) for i in range(h)]
-    batch_sizes = [min(cfg.batch_size, len(p)) for p in participants]
-
-    @jax.jit
-    def batch_grad(p, b):
-        def mean_loss(pp):
-            return jnp.mean(jax.vmap(lambda ex: model.loss_fn(pp, ex))(b))
-        return jax.grad(mean_loss)(p)
-
-    engine = EventEngine()
-    _schedule_availability(engine, nodes)
-    wire = 0.0
-    steps_done = [0] * h
-    parked = [False] * h
-    neighbor_cursor = [0] * h
-    dropouts = exchanges = 0
-
-    def start_step(i: int) -> None:
-        engine.schedule(
-            nodes[i].compute_time(batch_sizes[i]), ComputeDone(i, tag="gossip")
-        )
-
-    def average_pair(i: int, j: int) -> None:
-        avg = jax.tree_util.tree_map(
-            lambda a, b: 0.5 * (a + b), per_node_params[i], per_node_params[j]
-        )
-        per_node_params[i] = avg
-        per_node_params[j] = avg
-
-    def handler(ev) -> None:
-        nonlocal wire, dropouts, exchanges
-        if isinstance(ev, NodeDropout):
-            nodes[ev.node].online = False
-            dropouts += 1
-            return
-        if isinstance(ev, NodeRejoin):
-            nodes[ev.node].online = True
-            if parked[ev.node] and steps_done[ev.node] < total_steps:
-                parked[ev.node] = False
-                start_step(ev.node)
-            return
-        if isinstance(ev, ComputeDone) and ev.tag == "gossip":
-            i = ev.node
-            if not nodes[i].online:
-                parked[i] = True  # step lost mid-compute; resume on rejoin
-                return
-            part, bs = participants[i], batch_sizes[i]
-            idx = rngs[i].choice(len(part), size=bs, replace=False)
-            b = {"x": jnp.asarray(part.x[idx]), "y": jnp.asarray(part.y[idx])}
-            g = batch_grad(per_node_params[i], b)
-            per_node_params[i] = _sgd_update(
-                per_node_params[i], g, cfg.lr, cfg.weight_decay
-            )
-            steps_done[i] += 1
-            if steps_done[i] % cfg.gossip_every == 0:
-                # skip neighbours currently offline (connection refused);
-                # a neighbour dying mid-transfer is handled at arrival
-                nbrs = [j for j in topo.neighbors(i) if nodes[j].online]
-                if nbrs:
-                    j = nbrs[neighbor_cursor[i] % len(nbrs)]
-                    neighbor_cursor[i] += 1
-                    wire += model_bytes  # outbound leg
-                    engine.schedule(
-                        topo.transfer_time(i, j, model_bytes),
-                        TransferDone(i, j, model_bytes, tag="xchg"),
-                    )
-            if steps_done[i] < total_steps:
-                start_step(i)  # async: do not wait for the transfer
-            return
-        if isinstance(ev, TransferDone) and ev.tag == "xchg":
-            if nodes[ev.src].online and nodes[ev.dst].online:
-                average_pair(ev.src, ev.dst)
-                wire += model_bytes  # return leg only if the exchange happens
-                exchanges += 1
-
-    for i in range(h):
-        if nodes[i].online:
-            start_step(i)
-        else:
-            parked[i] = True
-    # run until every node finished its steps and in-flight exchanges land
-    while any(s < total_steps for s in steps_done) or len(engine):
-        if all(s >= total_steps for s in steps_done):
-            # only drain transfers/availability that are already in flight
-            if engine.pending_kinds() <= {NodeDropout, NodeRejoin}:
-                break  # nothing left that changes the models
-        ev = engine.pop()
-        if ev is None:
-            break
-        handler(ev)
-
-    consensus = jax.tree_util.tree_map(
-        lambda *xs: sum(xs[1:], xs[0]) / h, *per_node_params
-    )
-    return ArmReport(
-        arm="gossip", wall_clock=engine.now, bytes_on_wire=wire,
-        rounds_completed=min(steps_done), epsilon=0.0, params=consensus,
-        per_node_params=per_node_params, dropout_events=dropouts,
-        recoveries=0, lost_rounds=0, events=engine.processed,
-    )
-
-
-SIM_RUNNERS: dict[str, Callable[..., ArmReport]] = {
+SIM_RUNNERS: dict[str, Callable[..., RunReport]] = {
     "decaph": simulate_decaph,
     "fl": simulate_fl,
     "primia": simulate_primia,
     "local": simulate_local,
     "gossip": simulate_gossip,
+    "gossip-dp": simulate_gossip_dp,
 }
 
 

@@ -1,0 +1,249 @@
+"""Verbatim snapshot of the pre-refactor idealized runtimes (PR 1 state).
+
+Test fixture only: the Arm/Backend redesign promises that the deprecation
+shims in ``repro.core.federation`` reproduce the historical results
+seed-for-seed, and the only honest way to regression-test that is against a
+frozen copy of the historical loops.  Do NOT import this from library code —
+the single source of truth for arm numerics is ``repro.arms``.
+
+Copied from repro/core/federation.py @ 15d8ab4 (run_decaph / run_fl /
+run_primia bodies, including the then-current truncating ``_poisson_batch``);
+results are returned as plain tuples to avoid depending on the result type.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dp as dp_lib
+from repro.core.accountant import RDPAccountant, steps_for_epsilon
+from repro.core.leader import leader_schedule
+from repro.core.secagg import SecAggConfig, secure_sum
+
+
+def _poisson_batch(rng, part, rate, pad_to):
+    sel = rng.random(len(part)) < rate
+    idx = np.nonzero(sel)[0]
+    k = len(idx)
+    if k > pad_to:
+        idx = idx[:pad_to]
+        k = pad_to
+    xb = np.zeros((pad_to,) + part.x.shape[1:], part.x.dtype)
+    yb = np.zeros((pad_to,) + part.y.shape[1:], part.y.dtype)
+    xb[:k] = part.x[idx]
+    yb[:k] = part.y[idx]
+    mask = np.zeros((pad_to,), np.float32)
+    mask[:k] = 1.0
+    return {"x": xb, "y": yb}, mask, k
+
+
+def _sgd_update(params, grads, lr, wd):
+    return jax.tree_util.tree_map(
+        lambda p, g: p - lr * (g + wd * p), params, grads
+    )
+
+
+def legacy_run_decaph(model, participants, cfg):
+    """Pre-refactor run_decaph; returns (params, n_logged, losses, epsilon)."""
+    h = len(participants)
+    n_total = sum(len(p) for p in participants)
+    rate = cfg.batch_size / n_total
+    pad = cfg.max_pad_batch or max(8, int(rate * max(len(p) for p in participants) * 4))
+    leaders = leader_schedule(
+        h, cfg.rounds, seed=cfg.seed, strategy=cfg.leader_strategy
+    )
+    acct = RDPAccountant(
+        sampling_rate=rate,
+        noise_multiplier=cfg.dp.noise_multiplier,
+        delta=cfg.dp.delta,
+    )
+    n_rounds = cfg.rounds
+    if cfg.epsilon_budget is not None:
+        n_rounds = min(
+            cfg.rounds,
+            steps_for_epsilon(rate, cfg.dp.noise_multiplier,
+                              cfg.epsilon_budget, cfg.dp.delta,
+                              max_steps=cfg.rounds + 1),
+        )
+
+    key = jax.random.key(cfg.seed)
+    params = model.init_fn(key)
+    rng = np.random.default_rng(cfg.seed)
+
+    clipped_sum = jax.jit(
+        lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
+            model.loss_fn, p, b,
+            clip_norm=cfg.dp.clip_norm,
+            microbatch_size=min(cfg.dp.microbatch_size, pad),
+            mask=m,
+        )
+    )
+
+    round_losses = []
+    n_logged = 0
+    for t in range(n_rounds):
+        leader = int(leaders[t])
+        batches, masks, sizes = [], [], []
+        for part in participants:
+            b, m, k = _poisson_batch(rng, part, rate, pad)
+            batches.append(b)
+            masks.append(m)
+            sizes.append(k)
+        if cfg.use_secagg:
+            agg_size = secure_sum(
+                [jnp.asarray([float(s)]) for s in sizes],
+                SecAggConfig(h, frac_bits=0, seed=cfg.seed * 7919 + t),
+            )[0]
+            agg_batch = int(round(float(agg_size)))
+        else:
+            agg_batch = int(sum(sizes))
+        if agg_batch == 0:
+            n_logged += 1
+            continue
+        shares, losses = [], []
+        for i, (b, m) in enumerate(zip(batches, masks)):
+            g_sum, loss = clipped_sum(params, b, jnp.asarray(m))
+            nkey = jax.random.fold_in(jax.random.fold_in(key, 17 + t), i)
+            g_noised = dp_lib.tree_add_noise(
+                g_sum, nkey, clip_norm=cfg.dp.clip_norm,
+                noise_multiplier=cfg.dp.noise_multiplier, n_shares=h,
+            )
+            shares.append(g_noised)
+            losses.append(float(loss))
+        if cfg.use_secagg:
+            total = secure_sum(
+                shares, SecAggConfig(h, cfg.secagg_frac_bits, seed=cfg.seed + t)
+            )
+        else:
+            total = jax.tree_util.tree_map(
+                lambda *xs: sum(xs[1:], xs[0]), *shares
+            )
+        grad = jax.tree_util.tree_map(lambda x: x / agg_batch, total)
+        params = _sgd_update(params, grad, cfg.lr, cfg.weight_decay)
+        acct.step()
+        n_logged += 1
+        round_losses.append(float(np.mean(losses)))
+        if cfg.epsilon_budget is not None and acct.exceeds(cfg.epsilon_budget):
+            break
+    return params, n_logged, round_losses, acct.epsilon()
+
+
+def legacy_run_fl(model, participants, cfg):
+    """Pre-refactor run_fl; returns (params, n_logged)."""
+    h = len(participants)
+    n_total = sum(len(p) for p in participants)
+    rate = cfg.batch_size / n_total
+    pad = cfg.max_pad_batch or max(8, int(rate * max(len(p) for p in participants) * 4))
+    key = jax.random.key(cfg.seed)
+    params = model.init_fn(key)
+    rng = np.random.default_rng(cfg.seed)
+
+    def batch_grad(p, b, m):
+        def masked_loss(pp):
+            losses = jax.vmap(lambda ex: model.loss_fn(pp, ex))(b)
+            return jnp.sum(losses * m)
+        return jax.grad(masked_loss)(p)
+
+    batch_grad = jax.jit(batch_grad)
+    n_logged = 0
+    for t in range(cfg.rounds):
+        if cfg.fl_local_steps <= 1:  # FedSGD
+            grads, sizes = [], []
+            for part in participants:
+                b, m, k = _poisson_batch(rng, part, rate, pad)
+                grads.append(batch_grad(params, b, jnp.asarray(m)))
+                sizes.append(k)
+            agg = int(sum(sizes))
+            if agg == 0:
+                continue
+            total = jax.tree_util.tree_map(
+                lambda *xs: sum(xs[1:], xs[0]), *grads
+            )
+            grad = jax.tree_util.tree_map(lambda x: x / agg, total)
+            params = _sgd_update(params, grad, cfg.lr, cfg.weight_decay)
+        else:  # FedAvg: local epochs then size-weighted weight averaging
+            client_params, weights = [], []
+            for part in participants:
+                local = params
+                for _ in range(cfg.fl_local_steps):
+                    b, m, k = _poisson_batch(rng, part, rate, pad)
+                    if k == 0:
+                        continue
+                    g = batch_grad(local, b, jnp.asarray(m))
+                    g = jax.tree_util.tree_map(lambda x: x / max(k, 1), g)
+                    local = _sgd_update(local, g, cfg.lr, cfg.weight_decay)
+                client_params.append(local)
+                weights.append(len(part))
+            wsum = float(sum(weights))
+            params = jax.tree_util.tree_map(
+                lambda *xs: sum(w / wsum * x for w, x in zip(weights, xs)),
+                *client_params,
+            )
+        n_logged += 1
+    return params, n_logged
+
+
+def legacy_run_primia(model, participants, cfg):
+    """Pre-refactor run_primia; returns (params, n_logged, epsilon)."""
+    h = len(participants)
+    key = jax.random.key(cfg.seed)
+    params = model.init_fn(key)
+    rng = np.random.default_rng(cfg.seed)
+
+    per_client_batch = max(1, cfg.batch_size // h)
+    rates = [min(1.0, per_client_batch / max(len(p), 1)) for p in participants]
+    pads = [cfg.max_pad_batch or max(8, int(r * len(p) * 4) or 8)
+            for r, p in zip(rates, participants)]
+    accts = [
+        RDPAccountant(
+            sampling_rate=r, noise_multiplier=cfg.dp.noise_multiplier,
+            delta=cfg.dp.delta,
+        )
+        for r in rates
+    ]
+    budget = cfg.epsilon_budget or float("inf")
+    if cfg.epsilon_budget is not None:
+        max_rounds = [
+            steps_for_epsilon(r, cfg.dp.noise_multiplier, budget, cfg.dp.delta,
+                              max_steps=cfg.rounds + 1)
+            for r in rates
+        ]
+    else:
+        max_rounds = [cfg.rounds] * h
+
+    clipped_sum = jax.jit(
+        lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
+            model.loss_fn, p, b,
+            clip_norm=cfg.dp.clip_norm,
+            microbatch_size=cfg.dp.microbatch_size,
+            mask=m,
+        ),
+    )
+
+    n_logged = 0
+    for t in range(cfg.rounds):
+        updates, sizes = [], []
+        for i, part in enumerate(participants):
+            if accts[i].steps >= max_rounds[i]:
+                continue  # client's local budget exhausted -> drops out
+            b, m, k = _poisson_batch(rng, part, rates[i], pads[i])
+            g_sum, _ = clipped_sum(params, b, jnp.asarray(m))
+            nkey = jax.random.fold_in(jax.random.fold_in(key, 31 + t), i)
+            g = dp_lib.tree_add_noise(
+                g_sum, nkey, clip_norm=cfg.dp.clip_norm,
+                noise_multiplier=cfg.dp.noise_multiplier, n_shares=1,
+            )
+            g = jax.tree_util.tree_map(lambda x: x / max(k, 1), g)
+            updates.append(g)
+            sizes.append(k)
+            accts[i].step()
+        if not updates:
+            break
+        total = jax.tree_util.tree_map(lambda *xs: sum(xs[1:], xs[0]), *updates)
+        grad = jax.tree_util.tree_map(lambda x: x / len(updates), total)
+        params = _sgd_update(params, grad, cfg.lr, cfg.weight_decay)
+        n_logged += 1
+    eps = max(a.epsilon() for a in accts)
+    return params, n_logged, eps

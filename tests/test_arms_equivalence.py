@@ -1,0 +1,200 @@
+"""Arm/Backend acceptance: one set of numerics, two backends, one history.
+
+1. Cross-backend equivalence — for every registered arm, the sim backend
+   under an ideal trace (uniform nodes, effectively infinite bandwidth, zero
+   latency, no dropouts) reproduces the idealized backend's losses/params.
+2. Seed-for-seed shims — the deprecation shims in ``repro.core.federation``
+   reproduce the pre-refactor results exactly, verified against a frozen
+   snapshot of the historical loops (``tests/_legacy_federation.py``).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.arms as arms
+from repro.core.dp import DPConfig
+from repro.sim import Link, Topology, nodes_from_trace
+
+from _legacy_federation import (
+    legacy_run_decaph,
+    legacy_run_fl,
+    legacy_run_primia,
+)
+
+H = 4
+_IDEAL_LINK = Link(bandwidth=1e15, latency=0.0)
+
+
+def _make_model(d):
+    def init_fn(key):
+        return {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
+
+    def loss(params, ex):
+        logit = ex["x"] @ params["w"] + params["b"]
+        y = ex["y"]
+        return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+    def predict(params, x):
+        return jax.nn.sigmoid(x @ params["w"] + params["b"])
+
+    return arms.Model(init_fn, loss, predict)
+
+
+def _silos(seed=0, sizes=(120,) * H):
+    # equal silo sizes -> uniform per-step compute cost, so the ideal trace
+    # really is lockstep for the node arms
+    rng = np.random.default_rng(seed)
+    w_true = np.array([1.5, -2.0, 1.0, 0.0, 0.5])
+    out = []
+    for i, n in enumerate(sizes):
+        x = rng.normal(0.1 * i, 1.0, (n, 5)).astype(np.float32)
+        y = (x @ w_true + rng.normal(0, 0.2, n) > 0).astype(np.float32)
+        out.append(arms.Participant(x, y))
+    return out
+
+
+def _cfg(**kw):
+    base = dict(
+        rounds=5, batch_size=32, lr=0.3, seed=0, use_secagg=False,
+        dp=DPConfig(clip_norm=1.0, noise_multiplier=0.7, microbatch_size=8),
+    )
+    base.update(kw)
+    return arms.ArmConfig(**base)
+
+
+def _ideal_nodes(h=H):
+    return nodes_from_trace(
+        [{"throughput": 1000.0, "overhead": 0.01}] * h
+    )
+
+
+def _ideal_topology(kind: str, h=H) -> Topology:
+    if kind == "star":
+        return Topology.star(h, 0, _IDEAL_LINK)
+    if kind == "ring":
+        return Topology.ring(h, _IDEAL_LINK)
+    return Topology.full(h, _IDEAL_LINK)
+
+
+def _assert_trees_close(a, b, atol=0.0):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=0.0, atol=atol
+        )
+
+
+# -- 1. cross-backend equivalence -------------------------------------------
+
+
+@pytest.mark.parametrize("arm_name", arms.names())
+def test_sim_matches_ideal_under_ideal_trace(arm_name):
+    """SimRunner on an ideal trace == LocalRunner, for every registered arm."""
+    silos = _silos()
+    model = _make_model(5)
+    cfg = _cfg()
+    topo = _ideal_topology(arms.get(arm_name).topology_kind)
+
+    ideal = arms.run(arm_name, model, silos, cfg, topo=topo)
+    simmed = arms.run(arm_name, model, silos, cfg, backend="sim",
+                      nodes=_ideal_nodes(), topo=topo)
+
+    assert ideal.rounds_completed == simmed.rounds_completed
+    _assert_trees_close(ideal.params, simmed.params)
+    if ideal.per_node_params is not None:
+        assert simmed.per_node_params is not None
+        for a, b in zip(ideal.per_node_params, simmed.per_node_params):
+            _assert_trees_close(a, b)
+    # losses agree wherever both backends log them (round arms)
+    if ideal.logs and simmed.logs:
+        np.testing.assert_allclose(
+            [l.loss for l in ideal.logs], [l.loss for l in simmed.logs],
+            rtol=0.0, atol=0.0,
+        )
+    assert ideal.epsilon == pytest.approx(simmed.epsilon, abs=1e-9)
+    # the sim side additionally carries the systems story
+    assert simmed.timing is not None and ideal.timing is None
+    assert simmed.timing.wall_clock > 0
+
+
+def test_sim_backend_honors_epsilon_budget():
+    """Both backends pre-cap rounds via planned_rounds(): the sim side must
+    not overshoot the operator's budget by a round before noticing."""
+    silos = _silos()
+    model = _make_model(5)
+    cfg = _cfg(rounds=40, epsilon_budget=3.0)
+    ideal = arms.run("decaph", model, silos, cfg)
+    simmed = arms.run("decaph", model, silos, cfg, backend="sim",
+                      nodes=_ideal_nodes(), topo=_ideal_topology("full"))
+    assert ideal.rounds_completed == simmed.rounds_completed
+    assert simmed.epsilon <= 3.0 + 1e-9
+    _assert_trees_close(ideal.params, simmed.params)
+
+
+def test_decaph_secagg_cross_backend_within_fixed_point():
+    """With SecAgg on, the backends use different sessions (idealized
+    honest-but-curious vs dropout-robust), so they agree only up to the
+    fixed-point quantisation of each round's sum."""
+    silos = _silos()
+    model = _make_model(5)
+    cfg = _cfg(use_secagg=True)
+    ideal = arms.run("decaph", model, silos, cfg)
+    simmed = arms.run("decaph", model, silos, cfg, backend="sim",
+                      nodes=_ideal_nodes(), topo=_ideal_topology("full"))
+    assert ideal.rounds_completed == simmed.rounds_completed
+    _assert_trees_close(ideal.params, simmed.params, atol=5e-3)
+
+
+# -- 2. shims reproduce pre-refactor results seed-for-seed -------------------
+
+
+@pytest.mark.parametrize("use_secagg", [False, True])
+def test_run_decaph_shim_seed_for_seed(use_secagg):
+    from repro.core.federation import run_decaph
+
+    silos = _silos(sizes=(180, 120, 90))
+    model = _make_model(5)
+    cfg = _cfg(rounds=6, use_secagg=use_secagg, epsilon_budget=8.0)
+    new = run_decaph(model, silos, cfg)
+    params, n_logged, losses, eps = legacy_run_decaph(model, silos, cfg)
+    _assert_trees_close(new.params, params)
+    assert new.rounds_completed == n_logged
+    np.testing.assert_allclose(
+        [l.loss for l in new.logs if np.isfinite(l.loss)], losses,
+        rtol=0.0, atol=0.0,
+    )
+    assert new.epsilon == pytest.approx(eps, abs=1e-12)
+
+
+@pytest.mark.parametrize("local_steps", [1, 3])
+def test_run_fl_shim_seed_for_seed(local_steps):
+    from repro.core.federation import run_fl
+
+    silos = _silos(sizes=(180, 120, 90))
+    model = _make_model(5)
+    cfg = _cfg(rounds=6, fl_local_steps=local_steps)
+    new = run_fl(model, silos, cfg)
+    params, n_logged = legacy_run_fl(model, silos, cfg)
+    _assert_trees_close(new.params, params)
+    assert new.rounds_completed == n_logged
+    assert new.epsilon == 0.0
+
+
+def test_run_primia_shim_seed_for_seed():
+    from repro.core.federation import run_primia
+
+    # unequal silos: the small clients exhaust their local budgets first
+    silos = _silos(sizes=(300, 60, 60))
+    model = _make_model(5)
+    cfg = _cfg(rounds=20, epsilon_budget=2.0,
+               dp=DPConfig(clip_norm=1.0, noise_multiplier=1.0,
+                           microbatch_size=8))
+    new = run_primia(model, silos, cfg)
+    params, n_logged, eps = legacy_run_primia(model, silos, cfg)
+    _assert_trees_close(new.params, params)
+    assert new.rounds_completed == n_logged
+    assert new.epsilon == pytest.approx(eps, abs=1e-12)

@@ -1,0 +1,165 @@
+"""Arm registry, the gossip-dp satellite arm, the poisson-pad fix, the CLI."""
+
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.arms as arms
+from repro.arms.base import poisson_batch
+from repro.core.dp import DPConfig
+from repro.sim import Topology, nodes_from_trace
+
+
+def _make_model(d):
+    def init_fn(key):
+        return {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
+
+    def loss(params, ex):
+        logit = ex["x"] @ params["w"] + params["b"]
+        y = ex["y"]
+        return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+    def predict(params, x):
+        return jax.nn.sigmoid(x @ params["w"] + params["b"])
+
+    return arms.Model(init_fn, loss, predict)
+
+
+def _silos(seed=0, sizes=(150, 110, 90, 70)):
+    rng = np.random.default_rng(seed)
+    w_true = np.array([1.5, -2.0, 1.0, 0.0, 0.5])
+    out = []
+    for i, n in enumerate(sizes):
+        x = rng.normal(0.1 * i, 1.0, (n, 5)).astype(np.float32)
+        y = (x @ w_true + rng.normal(0, 0.2, n) > 0).astype(np.float32)
+        out.append(arms.Participant(x, y))
+    return out
+
+
+def _acc(model, params, silos):
+    x = np.concatenate([p.x for p in silos])
+    y = np.concatenate([p.y for p in silos])
+    return ((np.asarray(model.predict_fn(params, jnp.asarray(x))) > 0.5)
+            == y).mean()
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_registry_contains_every_arm_once():
+    expected = {"decaph", "fl", "primia", "local", "gossip", "gossip-dp"}
+    assert expected <= set(arms.names())
+    cls = arms.get("decaph")
+    assert cls.name == "decaph" and cls.mode == "round"
+    assert arms.get("gossip-dp").mode == "node"
+
+
+def test_registry_rejects_unknown_and_duplicate():
+    with pytest.raises(KeyError, match="registered arms"):
+        arms.get("does-not-exist")
+    with pytest.raises(ValueError, match="already registered"):
+
+        @arms.register("decaph")
+        class Impostor(arms.RoundArm):  # pragma: no cover - never runs
+            pass
+
+
+def test_runner_rejects_mismatched_nodes():
+    silos = _silos()
+    model = _make_model(5)
+    with pytest.raises(ValueError, match="one HospitalNode per participant"):
+        arms.run("fl", model, silos, arms.ArmConfig(rounds=2),
+                 backend="sim",
+                 nodes=nodes_from_trace([{"throughput": 100.0}] * 2),
+                 topo=Topology.star(2))
+
+
+# -- gossip-dp: the ROADMAP arm, <100 lines, both backends for free ----------
+
+
+def _dp_cfg(**kw):
+    base = dict(
+        rounds=8, batch_size=40, lr=0.4, seed=0,
+        dp=DPConfig(clip_norm=1.0, noise_multiplier=0.7, microbatch_size=8),
+    )
+    base.update(kw)
+    return arms.ArmConfig(**base)
+
+
+def test_gossip_dp_learns_and_accounts_on_both_backends():
+    silos = _silos()
+    model = _make_model(5)
+    cfg = _dp_cfg()
+    ideal = arms.run("gossip-dp", model, silos, cfg)
+    assert ideal.epsilon > 0
+    assert ideal.rounds_completed == 8
+    assert _acc(model, ideal.params, silos) > 0.75
+    simmed = arms.run(
+        "gossip-dp", model, silos, cfg, backend="sim",
+        nodes=nodes_from_trace(
+            [{"throughput": 200.0, "overhead": 0.02}] * 4),
+        topo=Topology.ring(4),
+    )
+    assert simmed.epsilon > 0
+    assert simmed.timing is not None and simmed.timing.bytes_on_wire > 0
+    assert _acc(model, simmed.params, silos) > 0.75
+
+
+def test_gossip_dp_budget_retires_nodes():
+    """A tiny per-node budget stops local steps early (local-DP semantics)."""
+    silos = _silos()
+    model = _make_model(5)
+    res = arms.run("gossip-dp", model, silos,
+                   _dp_cfg(rounds=30, epsilon_budget=1.0))
+    assert res.rounds_completed < 30  # budget exhausted before the horizon
+    assert res.epsilon <= 1.0 + 1e-6  # never overshoots the local budget
+
+
+# -- poisson_batch: no silent truncation -------------------------------------
+
+
+def test_poisson_batch_grows_pad_instead_of_truncating(caplog):
+    """A draw larger than the pad must keep every selected example (silent
+    truncation would bias sampling and void the subsampled-RDP analysis)."""
+    part = arms.Participant(
+        np.arange(64, dtype=np.float32).reshape(64, 1),
+        np.ones((64,), np.float32),
+    )
+    rng = np.random.default_rng(0)
+    with caplog.at_level(logging.WARNING, logger="repro.arms.base"):
+        batch, mask, k = poisson_batch(rng, part, rate=1.0, pad_to=16)
+    assert k == 64                      # every selected example survived
+    assert batch["x"].shape[0] == 64    # pad grew to the next power of two
+    assert int(mask.sum()) == 64
+    assert any("exceeded the padded batch" in r.message
+               for r in caplog.records)
+
+
+def test_poisson_batch_unchanged_when_pad_suffices():
+    part = arms.Participant(
+        np.arange(64, dtype=np.float32).reshape(64, 1),
+        np.ones((64,), np.float32),
+    )
+    b1, m1, k1 = poisson_batch(np.random.default_rng(7), part, 0.25, 32)
+    assert b1["x"].shape[0] == 32 and k1 == int(m1.sum()) and k1 < 32
+
+
+# -- CLI entry point ----------------------------------------------------------
+
+
+def test_cli_list_and_single_run(capsys):
+    from repro.run import main
+
+    assert main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name in arms.names():
+        assert name in out
+    assert main(["--arm", "fl", "--backend", "sim", "--rounds", "2",
+                 "--hospitals", "3", "--features", "6", "--examples", "120",
+                 "--batch", "24"]) == 0
+    out = capsys.readouterr().out
+    assert "sim_wall" in out
