@@ -25,27 +25,13 @@ import repro.arms as arms
 from repro.core.dp import DPConfig
 from repro.core.secagg import DropoutRobustSession, SecAggConfig
 from repro.data.synthetic import make_gemini_like
-from repro.run import linear_model, pooled_accuracy
+from repro.models.tabular import linear_model, pooled_accuracy
+from repro.scenarios.presets import FIVE_HOSPITAL_TRACE
 from repro.sim import Topology, nodes_from_trace
 
-# A 5-hospital cohort: a fast research centre down to a community-hospital
-# straggler (examples/sec), with the straggler also on the slowest WAN link.
-SCENARIO = {
-    "nodes": [
-        {"throughput": 500.0, "overhead": 0.02},
-        {"throughput": 300.0, "overhead": 0.02},
-        {"throughput": 180.0, "overhead": 0.03},
-        {"throughput": 110.0, "overhead": 0.04,
-         "dropouts": [[0.35, 2.5]]},          # flaky: drops mid-run, rejoins
-        {"throughput": 60.0, "overhead": 0.05},
-    ],
-    "topology": {
-        "kind": "full",
-        "default": {"bandwidth": 12.5e6, "latency": 0.02},
-        "links": {"0-4": {"bandwidth": 1.25e6, "latency": 0.08},
-                  "1-4": {"bandwidth": 1.25e6, "latency": 0.08}},
-    },
-}
+# The canonical 5-hospital heterogeneous cohort — defined exactly once, in
+# the scenario preset library (shared with examples/ and the sweep presets).
+SCENARIO = FIVE_HOSPITAL_TRACE
 
 
 def _topology_for(arm_cls, n: int, center: int) -> Topology:
@@ -114,11 +100,9 @@ def run(fast: bool = True) -> list[dict]:
         rep = arms.run(arm, model, silos, cfg, backend="sim",
                        nodes=nodes, topo=topo)
         elapsed_us = (time.time() - t0) * 1e6
-        acc = pooled_accuracy(
-            model,
-            rep.per_node_params[0] if arm == "local" else rep.params,
-            silos,
-        )
+        # rep.params is the arm's headline model (node arms pick it in
+        # consensus(): local -> node 0, gossip -> the average)
+        acc = pooled_accuracy(model, rep.params, silos)
         rows.append({
             "name": f"sim_{arm}",
             "us_per_call": elapsed_us,

@@ -11,13 +11,14 @@ lands mid-round.
 Run:  PYTHONPATH=src python examples/heterogeneous_hospitals.py
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 import repro.arms as arms
 from repro.core.dp import DPConfig
 from repro.data import make_gemini_like
+from repro.models.tabular import linear_model
+from repro.scenarios.presets import FIVE_HOSPITAL_NODES
 from repro.sim import Topology, nodes_from_trace
 
 
@@ -25,30 +26,12 @@ def main() -> None:
     silos = arms.normalize_participants(
         make_gemini_like(seed=0, n_total=1500, n_silos=5, n_features=32)
     )
+    model = linear_model(32)
 
-    def init_fn(key):
-        return {"w": jnp.zeros((32,)), "b": jnp.zeros(())}
-
-    def loss(params, ex):
-        logit = ex["x"] @ params["w"] + params["b"]
-        y = ex["y"]
-        return jnp.mean(jnp.maximum(logit, 0) - logit * y
-                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
-
-    def predict(params, x):
-        return jax.nn.sigmoid(x @ params["w"] + params["b"])
-
-    model = arms.Model(init_fn, loss, predict)
-
-    # Research centre (500 ex/s) down to community hospital (60 ex/s);
-    # hospital 3 loses connectivity at t=0.3s and rejoins at t=2.0s.
-    trace = [
-        {"throughput": 500.0, "overhead": 0.02},
-        {"throughput": 300.0, "overhead": 0.02},
-        {"throughput": 180.0, "overhead": 0.03},
-        {"throughput": 110.0, "overhead": 0.04, "dropouts": [[0.3, 2.0]]},
-        {"throughput": 60.0, "overhead": 0.05},
-    ]
+    # The canonical 5-hospital trace from the scenario preset library:
+    # research centre (500 ex/s) down to community hospital (60 ex/s), with
+    # the flaky mid-tier site dropping off mid-run and rejoining.
+    trace = FIVE_HOSPITAL_NODES
     cfg = arms.ArmConfig(
         rounds=15, batch_size=64, lr=0.4, seed=0,
         dp=DPConfig(clip_norm=1.0, noise_multiplier=0.8, microbatch_size=8),

@@ -11,8 +11,9 @@ wire) with no notion of time; the backends execute it either idealized
     timed  = arms.run("decaph", model, silos, cfg, backend="sim",
                       nodes=nodes, topo=topo)
 
-Registered arms: decaph, fl (FedSGD/FedAvg), primia (local-DP FL), local
-(silo-only), gossip (async D-PSGD), gossip-dp (local-DP D-PSGD).
+Registered arms: decaph, fl (FedSGD/FedAvg), fedprox (proximal-term FedAvg),
+primia (local-DP FL), local (silo-only), gossip (async D-PSGD), gossip-dp
+(local-DP D-PSGD).
 """
 
 from __future__ import annotations
@@ -41,6 +42,7 @@ from repro.arms.runners import LocalRunner, SimRunner, default_topology
 
 # importing the arm modules is what registers them
 from repro.arms import decaph as _decaph          # noqa: F401
+from repro.arms import fedprox as _fedprox        # noqa: F401
 from repro.arms import fl as _fl                  # noqa: F401
 from repro.arms import gossip as _gossip          # noqa: F401
 from repro.arms import gossip_dp as _gossip_dp    # noqa: F401

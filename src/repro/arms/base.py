@@ -104,6 +104,7 @@ class ArmConfig:
     secagg_frac_bits: int = 16
     secagg_threshold: int | None = None  # None -> majority of round's cohort
     fl_local_steps: int = 1        # >1 = FedAvg (weight averaging) for "fl"
+    fedprox_mu: float = 0.1        # proximal-term weight for "fedprox"
     leader_strategy: str = "uniform"
     seed: int = 0
     eval_every: int = 0            # 0 = never

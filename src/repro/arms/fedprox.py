@@ -1,0 +1,62 @@
+"""FedProx (Li et al., 2020) — FedAvg with a proximal term, as an arm.
+
+Each client takes ``max(2, fl_local_steps)`` local SGD steps on the
+regularised objective ``F_i(w) + (mu/2) ||w - w_global||^2``; the proximal
+term pulls local iterates back toward the round's global model, which
+stabilises FedAvg under the heterogeneous (non-IID) silos the paper's
+multi-hospital setting produces.  The server size-weights the resulting
+weights exactly like FedAvg.
+
+Registered once (DESIGN.md §5): both backends, the CLI smoke matrix, the
+sweep axes in ``repro.scenarios`` and the CI jobs all pick it up from the
+registry with no further wiring.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+from repro.arms.base import (
+    ArmConfig,
+    Contribution,
+    Model,
+    Participant,
+    poisson_batch,
+    sgd_update,
+    tree_div,
+)
+from repro.arms.fl import FLArm
+from repro.arms.registry import register
+
+
+@register("fedprox")
+class FedProxArm(FLArm):
+    """Proximal-term FedAvg: heterogeneity-robust server-based FL."""
+
+    def __init__(self, model: Model, participants: Sequence[Participant],
+                 cfg: ArmConfig) -> None:
+        super().__init__(model, participants, cfg)
+        # FedProx is only distinct from FedSGD when clients take multiple
+        # local steps; always use the weight-averaging (FedAvg) aggregation.
+        self.fedavg = True
+        self.local_steps = max(2, cfg.fl_local_steps)
+        self.mu = cfg.fedprox_mu
+
+    def contribution(self, params, i, t, rng, n_shares):
+        part = self.participants[i]
+        local, consumed = params, 0
+        for _ in range(self.local_steps):
+            b, m, k = poisson_batch(rng, part, self.rate, self.pad)
+            if k == 0:
+                continue
+            g = tree_div(self._batch_grad(local, b, jax.numpy.asarray(m)),
+                         max(k, 1))
+            # grad of (mu/2)||w - w_global||^2 at the local iterate
+            g = jax.tree_util.tree_map(
+                lambda gl, wl, wg: gl + self.mu * (wl - wg), g, local, params
+            )
+            local = sgd_update(local, g, self.cfg.lr, self.cfg.weight_decay)
+            consumed += k
+        return Contribution(payload=local, size=consumed)

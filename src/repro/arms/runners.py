@@ -242,9 +242,18 @@ class SimRunner:
         self.nodes = list(nodes)
         self.topo = topo
 
+    def _pop(self, engine: EventEngine):
+        """Pop the next event, folding scheduled link churn into the topology
+        up to the new simulated time before any link is consulted."""
+        ev = engine.pop()
+        if ev is not None:
+            self.topo.advance_to(engine.now)
+        return ev
+
     def run(self, arm: Arm) -> RunReport:
         if len(self.nodes) != arm.h:
             raise ValueError("one HospitalNode per participant required")
+        self.topo.advance_to(0.0)  # fold in any t=0 schedule entries
         if isinstance(arm, RoundArm):
             return self._run_rounds(arm)
         if isinstance(arm, NodeArm):
@@ -282,7 +291,7 @@ class SimRunner:
             sum(n.online for n in self.nodes) < minimum
             or (require is not None and not self.nodes[require].online)
         ):
-            ev = engine.pop()
+            ev = self._pop(engine)
             if ev is None:
                 return n_drop, False  # quorum never reachable again
             if self._apply_availability(ev):
@@ -313,7 +322,7 @@ class SimRunner:
                 compute_s, ComputeDone(i, tag=tag, payload=(payload, nbytes))
             )
         while pending:
-            ev = engine.pop()
+            ev = self._pop(engine)
             if ev is None:
                 break
             if self._apply_availability(ev):
@@ -337,6 +346,12 @@ class SimRunner:
                 if ev.node == dst:
                     delivered[ev.node] = payload
                     pending.discard(ev.node)
+                    inflight.pop(ev.node, None)
+                elif not topo.has_edge(ev.node, dst):
+                    # link churn severed the path before the upload started;
+                    # from the aggregator's view the node dropped mid-round
+                    pending.discard(ev.node)
+                    dropped_mid.add(ev.node)
                     inflight.pop(ev.node, None)
                 else:
                     wire += nbytes
@@ -364,7 +379,7 @@ class SimRunner:
         wire = 0.0
         n_drop = 0
         for j in targets:
-            if j == src or not nodes[j].online:
+            if j == src or not nodes[j].online or not topo.has_edge(src, j):
                 continue
             wire += nbytes
             outstanding += 1
@@ -373,7 +388,7 @@ class SimRunner:
                 TransferDone(src, j, nbytes, tag=tag),
             )
         while outstanding:
-            ev = engine.pop()
+            ev = self._pop(engine)
             if ev is None:
                 break
             if self._apply_availability(ev):
@@ -512,7 +527,8 @@ class SimRunner:
     ) -> int:
         """Time cost of the Shamir share gather (tiny, latency-bound)."""
         tag = f"shares-{next(_tag_counter)}"
-        surv = [i for i in delivered if i != dst]
+        surv = [i for i in delivered
+                if i != dst and self.topo.has_edge(i, dst)]
         for j in surv:
             engine.schedule(
                 self.topo.transfer_time(j, dst, _SHARE_BYTES),
@@ -521,7 +537,7 @@ class SimRunner:
         outstanding = len(surv)
         n_drop = 0
         while outstanding:
-            ev = engine.pop()
+            ev = self._pop(engine)
             if ev is None:
                 break
             if self._apply_availability(ev):
@@ -612,7 +628,7 @@ class SimRunner:
                 # only drain transfers that are already in flight
                 if engine.pending_kinds() <= {NodeDropout, NodeRejoin}:
                     break  # nothing left that changes the models
-            ev = engine.pop()
+            ev = self._pop(engine)
             if ev is None:
                 break
             handler(ev)

@@ -25,6 +25,25 @@ import numpy as np
 from repro.arms.base import Participant
 
 
+def _silo_props(published: "np.ndarray", n_silos: int) -> "np.ndarray":
+    """Per-silo size proportions for any cohort size.
+
+    Up to the published count the paper's proportions are used verbatim
+    (same silo sizes as before for any given seed); beyond it the tail
+    decays geometrically from the smallest published silo — capacity sweeps
+    run H=10/20 cohorts the papers never enumerated.  Always renormalised
+    to sum to 1.
+    """
+    if n_silos <= len(published):
+        props = published[:n_silos]
+    else:
+        tail = published.min() * 0.8 ** np.arange(
+            1, n_silos - len(published) + 1
+        )
+        props = np.concatenate([published, tail])
+    return props / props.sum()
+
+
 def _latent_binary_task(rng, n, d_feat, d_latent, w_scale=1.0):
     """Linear-logit ground truth in a latent space + nuisance dims."""
     w = rng.normal(0, w_scale, d_latent)
@@ -46,8 +65,9 @@ def make_gemini_like(
     """8-hospital EHR-like binary mortality task with silo skew + shift."""
     rng = np.random.default_rng(seed)
     # Paper Fig 2a: hospital sizes are heavily skewed.
-    props = np.array([0.22, 0.18, 0.15, 0.12, 0.10, 0.09, 0.08, 0.06])[:n_silos]
-    props = props / props.sum()
+    props = _silo_props(
+        np.array([0.22, 0.18, 0.15, 0.12, 0.10, 0.09, 0.08, 0.06]), n_silos
+    )
     d_latent = 24
     shift_std = 0.8
     w = rng.normal(0, 1.2, d_latent)
@@ -88,8 +108,7 @@ def make_pancreas_like(
 ) -> list[Participant]:
     """5-study scRNA-like 4-class task; silo 4 tiny (paper's Wang study)."""
     rng = np.random.default_rng(seed)
-    props = np.array([0.55, 0.20, 0.13, 0.02, 0.10])[:n_silos]
-    props = props / props.sum()
+    props = _silo_props(np.array([0.55, 0.20, 0.13, 0.02, 0.10]), n_silos)
     # informative genes per type (marker genes)
     n_marker = 120
     markers = rng.choice(n_genes, (n_types, n_marker), replace=True)
@@ -119,8 +138,7 @@ def make_xray_like(
 ) -> list[Participant]:
     """3-study image task, 4 multilabel outputs with structured patterns."""
     rng = np.random.default_rng(seed)
-    props = np.array([0.31, 0.24, 0.45])[:n_silos]
-    props = props / props.sum()
+    props = _silo_props(np.array([0.31, 0.24, 0.45]), n_silos)
     silos = []
     hw = image_size
     for i in range(n_silos):

@@ -15,8 +15,39 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.arms.base import Model
+
+
+def linear_model(d: int) -> Model:
+    """Flat-pytree logistic regression — small enough for smoke runs, real
+    enough to learn.  The canonical tiny model for the CLI
+    (``repro.run``), ``benchmarks/sim_report.py`` and the scenario sweeps;
+    keep the numerically-stable softplus form in this one place.
+    """
+
+    def init_fn(key):
+        return {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
+
+    def loss(params, ex):
+        logit = ex["x"] @ params["w"] + params["b"]
+        y = ex["y"]
+        return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+    def predict(params, x):
+        return jax.nn.sigmoid(x @ params["w"] + params["b"])
+
+    return Model(init_fn, loss, predict)
+
+
+def pooled_accuracy(model: Model, params, silos) -> float:
+    """Binary accuracy of ``params`` over every silo's examples pooled."""
+    x = np.concatenate([p.x for p in silos])
+    y = np.concatenate([p.y for p in silos])
+    pred = np.asarray(model.predict_fn(params, jnp.asarray(x))) > 0.5
+    return float((pred == y).mean())
 
 
 def _dense_init(key, d_in, d_out):

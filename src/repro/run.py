@@ -14,43 +14,12 @@ from __future__ import annotations
 import argparse
 import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 import repro.arms as arms
 from repro.core.dp import DPConfig
 from repro.data.synthetic import make_gemini_like
+# re-exported for pre-refactor callers; canonical home is the model zoo
+from repro.models.tabular import linear_model, pooled_accuracy  # noqa: F401
 from repro.sim.nodes import heterogeneous_trace, nodes_from_trace
-
-
-def linear_model(d: int) -> arms.Model:
-    """Logistic regression — small enough for smoke, real enough to learn.
-
-    Shared with ``benchmarks/sim_report.py``; keep the numerically-stable
-    softplus form in one place.
-    """
-
-    def init_fn(key):
-        return {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
-
-    def loss(params, ex):
-        logit = ex["x"] @ params["w"] + params["b"]
-        y = ex["y"]
-        return jnp.mean(jnp.maximum(logit, 0) - logit * y
-                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
-
-    def predict(params, x):
-        return jax.nn.sigmoid(x @ params["w"] + params["b"])
-
-    return arms.Model(init_fn, loss, predict)
-
-
-def pooled_accuracy(model: arms.Model, params, silos) -> float:
-    x = np.concatenate([p.x for p in silos])
-    y = np.concatenate([p.y for p in silos])
-    pred = np.asarray(model.predict_fn(params, jnp.asarray(x))) > 0.5
-    return float((pred == y).mean())
 
 
 def run_one(arm_name: str, backend: str, *, rounds: int, hospitals: int,

@@ -1,0 +1,64 @@
+"""repro.scenarios — declarative scenario suite + cached parallel sweeps.
+
+The paper's claims are comparative (DeCaPH vs FL vs PriMIA vs local across
+three multi-hospital case studies); this package makes every comparison cell
+a declarative, JSON-serialisable ``ScenarioSpec``, gives the named cells a
+preset library (``presets``), expands axis products with ``SweepGrid``,
+executes them through a content-addressed result cache with process-pool
+parallelism (``run_sweep``), and fits wall-clock/bytes scaling laws into
+``BENCH_sweep.json`` + a markdown report (``report``).  See DESIGN.md §6.
+
+    from repro.scenarios import ScenarioSpec, get_preset, get_sweep
+    from repro.scenarios import ResultCache, run_sweep, run_spec
+
+    outcome = run_sweep(get_sweep("capacity-mini").specs(), ResultCache())
+
+CLI: ``python -m repro.scenarios --list/--run/--sweep/--report``.
+"""
+
+from repro.scenarios.cache import DEFAULT_CACHE_DIR, ResultCache
+from repro.scenarios.executor import (
+    SweepOutcome,
+    build_scenario,
+    run_spec,
+    run_sweep,
+)
+from repro.scenarios.grid import SWEEPS, SweepGrid, get_sweep
+from repro.scenarios.presets import (
+    FIVE_HOSPITAL_NODES,
+    FIVE_HOSPITAL_TOPOLOGY,
+    FIVE_HOSPITAL_TRACE,
+    all_presets,
+    get_preset,
+)
+from repro.scenarios.report import (
+    bench_payload,
+    fit_power_law,
+    markdown_report,
+    scaling_laws,
+    write_artifacts,
+)
+from repro.scenarios.spec import ScenarioSpec
+
+__all__ = [
+    "DEFAULT_CACHE_DIR",
+    "FIVE_HOSPITAL_NODES",
+    "FIVE_HOSPITAL_TOPOLOGY",
+    "FIVE_HOSPITAL_TRACE",
+    "ResultCache",
+    "SWEEPS",
+    "ScenarioSpec",
+    "SweepGrid",
+    "SweepOutcome",
+    "all_presets",
+    "bench_payload",
+    "build_scenario",
+    "fit_power_law",
+    "get_preset",
+    "get_sweep",
+    "markdown_report",
+    "run_spec",
+    "run_sweep",
+    "scaling_laws",
+    "write_artifacts",
+]

@@ -1,0 +1,147 @@
+"""``SweepGrid`` — expand axis products into scenario-spec lists.
+
+A grid is a base ``ScenarioSpec`` plus named axes (any spec field -> list of
+values); ``specs()`` is the cartesian product, each cell named
+``sweep/axis=value,...`` so cache entries and report rows are self-describing.
+
+Named sweeps live in ``SWEEPS``.  The arm axis is resolved lazily from
+``repro.arms.names()`` at expansion time, so a newly registered arm (e.g.
+``fedprox``) joins every sweep automatically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Mapping, Sequence
+
+from repro.scenarios.spec import ScenarioSpec
+
+
+def _registered_arms() -> tuple[str, ...]:
+    # deferred: expanding a sweep is the only scenarios path that needs the
+    # (jax-importing) arm registry
+    import repro.arms as arms
+
+    return arms.names()
+
+
+@dataclasses.dataclass
+class SweepGrid:
+    """Axis product over ScenarioSpec fields."""
+
+    name: str
+    base: ScenarioSpec
+    axes: Mapping[str, Sequence[Any]]
+
+    def __post_init__(self) -> None:
+        fields = {f.name for f in dataclasses.fields(ScenarioSpec)}
+        bad = set(self.axes) - fields
+        if bad:
+            raise ValueError(f"axes over unknown spec fields: {sorted(bad)}")
+        for axis, values in self.axes.items():
+            if not values:
+                raise ValueError(f"axis {axis!r} has no values")
+
+    def size(self) -> int:
+        out = 1
+        for values in self.axes.values():
+            out *= len(values)
+        return out
+
+    def specs(self) -> list[ScenarioSpec]:
+        keys = sorted(self.axes)
+        cells = []
+        for combo in itertools.product(*(self.axes[k] for k in keys)):
+            assignment = dict(zip(keys, combo))
+            label = ",".join(f"{k}={assignment[k]}" for k in keys)
+            cells.append(self.base.replace(
+                name=f"{self.name}/{label}",
+                tags=self.base.tags + ("sweep:" + self.name,),
+                **assignment,
+            ))
+        return cells
+
+
+# ---------------------------------------------------------------------------
+# Named sweeps (factories, so the arm axis reflects the live registry).
+# ---------------------------------------------------------------------------
+
+
+def _tiny_base(name_prefix: str) -> ScenarioSpec:
+    """A cell that finishes in ~a second: linear model, small cohort."""
+    return ScenarioSpec(
+        name=name_prefix, task="gemini", model_size="small", features=8,
+        examples=240, rounds=3, batch_size=32, lr=0.4, seed=0,
+        backend="sim",
+    )
+
+
+def capacity_mini() -> SweepGrid:
+    """Every registered arm x H in {3, 5}, tiny shapes — the resumable
+    acceptance sweep (>= 12 cells, seconds per cell)."""
+    return SweepGrid(
+        "capacity-mini",
+        _tiny_base("capacity-mini"),
+        {"arm": list(_registered_arms()), "hospitals": [3, 5]},
+    )
+
+
+def capacity() -> SweepGrid:
+    """The ROADMAP capacity-planning sweep: every arm x H x bandwidth tier
+    x straggler ratio at medium model size (run on demand; hours of sim)."""
+    base = ScenarioSpec(
+        name="capacity", task="gemini", model_size="medium",
+        examples=2400, rounds=12, batch_size=64, lr=0.4, backend="sim",
+    )
+    return SweepGrid(
+        "capacity",
+        base,
+        {
+            "arm": list(_registered_arms()),
+            "hospitals": [3, 5, 10, 20],
+            "bandwidth": [12.5e6, 1.25e6],       # ~100 / ~10 Mbit/s WAN
+            "straggler_ratio": [0.0, 0.3],
+        },
+    )
+
+
+def model_scaling() -> SweepGrid:
+    """Every arm x model size ladder at fixed H — feeds the bytes-vs-params
+    scaling law."""
+    base = ScenarioSpec(
+        name="model-scaling", task="gemini", model_size="small",
+        hospitals=4, examples=960, rounds=4, batch_size=48, lr=0.4,
+        backend="sim",
+    )
+    return SweepGrid(
+        "model-scaling",
+        base,
+        {"arm": list(_registered_arms()), "model_size": ["small", "medium"]},
+    )
+
+
+def smoke_2x2() -> SweepGrid:
+    """CI sweep: two arms x two cohort sizes, tiny models (seconds total)."""
+    return SweepGrid(
+        "smoke-2x2",
+        _tiny_base("smoke-2x2").replace(examples=200, rounds=2),
+        {"arm": ["decaph", "fedprox"], "hospitals": [3, 4]},
+    )
+
+
+SWEEPS: dict[str, Callable[[], SweepGrid]] = {
+    "capacity-mini": capacity_mini,
+    "capacity": capacity,
+    "model-scaling": model_scaling,
+    "smoke-2x2": smoke_2x2,
+}
+
+
+def get_sweep(name: str) -> SweepGrid:
+    try:
+        return SWEEPS[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown sweep {name!r}; available: {', '.join(sorted(SWEEPS))}"
+        ) from None

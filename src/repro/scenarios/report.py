@@ -1,0 +1,138 @@
+"""Scaling-law analysis over sweep cells + report/artifact emission.
+
+Fits log-log least-squares power laws per arm from the sweep's cells:
+
+  * simulated wall-clock vs cohort size H   (``wall ∝ H^b``)
+  * bytes-on-wire vs cohort size H
+  * bytes-on-wire vs model parameter count  (when the sweep varies size)
+
+and renders a markdown report (scaling-law tables + the raw cell table)
+plus the ``BENCH_sweep.json`` artifact CI uploads — the repo's perf
+trajectory for the ROADMAP's capacity-planning item.
+
+Pure stdlib: fitting two-point-or-more lines in log space needs no numpy,
+and the report path must stay importable without the JAX stack.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+from typing import Sequence
+
+
+def fit_power_law(xs: Sequence[float], ys: Sequence[float]) -> dict | None:
+    """Least-squares fit of ``y = a * x^b`` in log-log space.
+
+    Points with a non-positive x or y are dropped (logs undefined — e.g. a
+    zero-traffic arm).  Returns {"exponent", "coefficient", "r2", "points"}
+    over the surviving points, or None when fewer than two distinct x
+    values survive.
+    """
+    pts = [(x, y) for x, y in zip(xs, ys) if x > 0 and y > 0]
+    if len({x for x, _ in pts}) < 2:
+        return None
+    lx = [math.log(x) for x, _ in pts]
+    ly = [math.log(y) for _, y in pts]
+    n = len(pts)
+    mx, my = sum(lx) / n, sum(ly) / n
+    var = sum((x - mx) ** 2 for x in lx)
+    b = sum((x - mx) * (y - my) for x, y in zip(lx, ly)) / var
+    a = my - b * mx
+    ss_res = sum((y - (a + b * x)) ** 2 for x, y in zip(lx, ly))
+    ss_tot = sum((y - my) ** 2 for y in ly)
+    r2 = 1.0 if ss_tot == 0 else 1.0 - ss_res / ss_tot
+    return {"exponent": b, "coefficient": math.exp(a), "r2": r2, "points": n}
+
+
+def _fit_by_arm(cells: list[dict], x_key: str, y_key: str) -> dict[str, dict]:
+    arms = sorted({c["arm"] for c in cells})
+    out = {}
+    for arm in arms:
+        rows = [c for c in cells if c["arm"] == arm]
+        fit = fit_power_law([c[x_key] for c in rows],
+                            [c[y_key] for c in rows])
+        if fit is not None:
+            out[arm] = fit
+    return out
+
+
+def scaling_laws(cells: Sequence[dict]) -> dict:
+    """All fits the sweep's cells support, keyed by law name."""
+    sim = [c for c in cells if c.get("backend") == "sim"]
+    return {
+        "wall_clock_vs_hospitals": _fit_by_arm(sim, "hospitals", "wall_clock"),
+        "bytes_vs_hospitals": _fit_by_arm(sim, "hospitals", "bytes_on_wire"),
+        "bytes_vs_model_params": _fit_by_arm(sim, "model_params",
+                                             "bytes_on_wire"),
+    }
+
+
+_LAW_TITLES = {
+    "wall_clock_vs_hospitals": ("Simulated wall-clock vs cohort size",
+                                "wall ∝ H^b"),
+    "bytes_vs_hospitals": ("Bytes on wire vs cohort size", "bytes ∝ H^b"),
+    "bytes_vs_model_params": ("Bytes on wire vs model size",
+                              "bytes ∝ params^b"),
+}
+
+
+def markdown_report(sweep_name: str, cells: Sequence[dict],
+                    laws: dict | None = None) -> str:
+    """The human-readable sweep report (scaling laws + cell table)."""
+    laws = laws if laws is not None else scaling_laws(cells)
+    lines = [f"# Sweep `{sweep_name}` — {len(cells)} cells", ""]
+    for law, fits in laws.items():
+        title, form = _LAW_TITLES.get(law, (law, "y ∝ x^b"))
+        if not fits:
+            continue
+        lines += [f"## {title} ({form})", "",
+                  "| arm | exponent b | coefficient a | R² | cells |",
+                  "|---|---|---|---|---|"]
+        for arm, fit in sorted(fits.items()):
+            lines.append(
+                f"| {arm} | {fit['exponent']:.3f} | "
+                f"{fit['coefficient']:.4g} | {fit['r2']:.3f} | "
+                f"{fit['points']} |"
+            )
+        lines.append("")
+    lines += ["## Cells", "",
+              "| cell | arm | H | size | rounds | ε | utility | "
+              "sim wall (s) | bytes | recov |",
+              "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        lines.append(
+            f"| {c['name']} | {c['arm']} | {c['hospitals']} | "
+            f"{c['model_size']} | {c['rounds_completed']} | "
+            f"{c['epsilon']:.2f} | {c['accuracy']:.3f} | "
+            f"{c['wall_clock']:.3f} | {c['bytes_on_wire']:.0f} | "
+            f"{c['recoveries']} |"
+        )
+    lines.append("")
+    return "\n".join(lines)
+
+
+def bench_payload(sweep_name: str, cells: Sequence[dict],
+                  laws: dict | None = None) -> dict:
+    """The ``BENCH_sweep.json`` structure (CI artifact)."""
+    return {
+        "sweep": sweep_name,
+        "cells": list(cells),
+        "scaling_laws": laws if laws is not None else scaling_laws(cells),
+        "generated_by": "python -m repro.scenarios",
+    }
+
+
+def write_artifacts(sweep_name: str, cells: Sequence[dict],
+                    out_json: str | Path) -> tuple[Path, Path]:
+    """Write BENCH_sweep.json + the sibling .md; returns both paths."""
+    laws = scaling_laws(cells)
+    out_json = Path(out_json)
+    out_json.write_text(
+        json.dumps(bench_payload(sweep_name, cells, laws), indent=2,
+                   sort_keys=True)
+    )
+    out_md = out_json.with_suffix(".md")
+    out_md.write_text(markdown_report(sweep_name, cells, laws))
+    return out_json, out_md

@@ -29,7 +29,7 @@ from repro.sim.nodes import (
     node_from_trace,
     nodes_from_trace,
 )
-from repro.sim.topology import Link, Topology
+from repro.sim.topology import Link, LinkChange, LinkSchedule, Topology
 
 _PROTOCOL_NAMES = (
     "ArmReport",
@@ -58,6 +58,8 @@ __all__ = [
     "EventEngine",
     "HospitalNode",
     "Link",
+    "LinkChange",
+    "LinkSchedule",
     "NodeDropout",
     "NodeRejoin",
     "Topology",

@@ -15,12 +15,17 @@ Builders cover the paper-relevant shapes:
   * ``k_regular`` — circulant k-regular gossip graph (each node talks to
                     its k nearest ring neighbours), the standard D-PSGD
                     communication graph.
+
+Topologies may carry a ``LinkSchedule`` — timestamped link changes (degrade,
+remove, restore) that model WAN churn.  The schedule is applied lazily:
+``advance_to(t)`` folds in every change with time <= t, and the sim backend
+calls it whenever the simulated clock moves before consulting a link.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Mapping
+from typing import Iterable, Mapping, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,8 +43,78 @@ class Link:
 _DEFAULT_LINK = Link(bandwidth=12.5e6, latency=0.02)  # ~100 Mbit/s WAN
 
 
+@dataclasses.dataclass(frozen=True)
+class LinkChange:
+    """One scheduled link event: at ``time``, edge i<->j becomes ``link``
+    (both directions), or is removed entirely when ``link`` is None."""
+
+    time: float
+    i: int
+    j: int
+    link: Link | None
+
+    def __post_init__(self) -> None:
+        if self.time < 0:
+            raise ValueError("change time must be >= 0")
+        if self.i == self.j:
+            raise ValueError(f"self-edge ({self.i}, {self.j})")
+
+
+class LinkSchedule:
+    """Time-ordered link churn: bandwidth/latency changes and edge removals.
+
+    JSON form (one entry per change; ``down`` removes the edge, an entry
+    with a bandwidth re-adds or re-rates it; ``latency`` defaults to 0.0,
+    matching the ``links`` override convention of ``Topology.from_trace``)::
+
+        [{"t": 2.0, "link": "0-4", "bandwidth": 1.25e5, "latency": 0.4},
+         {"t": 3.5, "link": "0-4", "down": true},
+         {"t": 9.0, "link": "0-4", "bandwidth": 1.25e6, "latency": 0.08}]
+    """
+
+    def __init__(self, changes: Iterable[LinkChange]):
+        self.changes: tuple[LinkChange, ...] = tuple(
+            sorted(changes, key=lambda c: c.time)
+        )
+
+    def __len__(self) -> int:
+        return len(self.changes)
+
+    @classmethod
+    def from_trace(cls, entries: Sequence[Mapping]) -> "LinkSchedule":
+        changes = []
+        for e in entries:
+            i, j = (int(x) for x in str(e["link"]).split("-"))
+            if e.get("down"):
+                link = None
+            else:
+                link = Link(float(e["bandwidth"]), float(e.get("latency", 0.0)))
+            changes.append(LinkChange(float(e["t"]), i, j, link))
+        return cls(changes)
+
+    def to_trace(self) -> list[dict]:
+        out = []
+        for c in self.changes:
+            entry: dict = {"t": c.time, "link": f"{c.i}-{c.j}"}
+            if c.link is None:
+                entry["down"] = True
+            else:
+                entry["bandwidth"] = c.link.bandwidth
+                entry["latency"] = c.link.latency
+            out.append(entry)
+        return out
+
+
+def _validate_schedule(schedule: LinkSchedule, n: int) -> None:
+    for c in schedule.changes:
+        if not (0 <= c.i < n and 0 <= c.j < n):
+            raise ValueError(
+                f"schedule change on edge ({c.i}, {c.j}) for n={n}"
+            )
+
+
 class Topology:
-    """Pairwise links over ``n`` hospitals."""
+    """Pairwise links over ``n`` hospitals (optionally time-varying)."""
 
     def __init__(
         self,
@@ -47,6 +122,7 @@ class Topology:
         links: Mapping[tuple[int, int], Link],
         *,
         name: str = "custom",
+        schedule: LinkSchedule | None = None,
     ):
         if n < 1:
             raise ValueError("need at least one node")
@@ -57,6 +133,31 @@ class Topology:
             if not (0 <= i < n and 0 <= j < n) or i == j:
                 raise ValueError(f"bad edge ({i}, {j}) for n={n}")
             self._links[(i, j)] = link
+        self.schedule = schedule
+        self._applied = 0  # index of the next unapplied schedule change
+        if schedule is not None:
+            _validate_schedule(schedule, n)
+
+    def advance_to(self, t: float) -> int:
+        """Apply every scheduled change with time <= ``t``; returns how many
+        fired.  Idempotent and monotonic — the sim clock never rewinds."""
+        if self.schedule is None:
+            return 0
+        fired = 0
+        while (
+            self._applied < len(self.schedule.changes)
+            and self.schedule.changes[self._applied].time <= t
+        ):
+            c = self.schedule.changes[self._applied]
+            if c.link is None:
+                self._links.pop((c.i, c.j), None)
+                self._links.pop((c.j, c.i), None)
+            else:
+                self._links[(c.i, c.j)] = c.link
+                self._links[(c.j, c.i)] = c.link
+            self._applied += 1
+            fired += 1
+        return fired
 
     def has_edge(self, i: int, j: int) -> bool:
         return (i, j) in self._links
@@ -136,9 +237,11 @@ class Topology:
         {"n": 5, "kind": "full" | "star" | "ring" | "k_regular",
          "k": 2, "center": 0,
          "default": {"bandwidth": 12.5e6, "latency": 0.02},
-         "links": {"0-1": {"bandwidth": 1e6, "latency": 0.1}, ...}}
+         "links": {"0-1": {"bandwidth": 1e6, "latency": 0.1}, ...},
+         "schedule": [{"t": 2.0, "link": "0-1", "down": true}, ...]}
 
-        ``links`` entries override the builder's default on both directions.
+        ``links`` entries override the builder's default on both directions;
+        ``schedule`` entries are ``LinkSchedule`` churn events (optional).
         """
         n = int(trace["n"])
         default = trace.get("default")
@@ -167,4 +270,9 @@ class Topology:
                 raise ValueError(f"override for absent edge {key!r}")
             topo._links[(i, j)] = override
             topo._links[(j, i)] = override
+        sched = trace.get("schedule")
+        if sched:
+            schedule = LinkSchedule.from_trace(sched)
+            _validate_schedule(schedule, n)
+            topo.schedule = schedule
         return topo
