@@ -1,0 +1,215 @@
+"""The training hot path: per-round wall time + jit dispatches, loop vs fused.
+
+Starts the perf trajectory for the round hot path (DESIGN.md §7): for each
+cohort size H, run the same arm/config through the legacy per-participant
+contribution loop (``fused_rounds=False``) and the fused cohort round-step
+(default), and report
+
+  * marginal wall-clock per round — measured as
+    ``(T(r_hi) - T(r_lo)) / (r_hi - r_lo)`` over two fresh runs, so one-time
+    costs (jit compilation, arm construction, leader-schedule setup) cancel
+    and the number is the steady-state per-round cost;
+  * jit program launches per round, from the ``instrumented_jit`` counter in
+    ``repro.arms.fused`` — O(H) on the loop path, O(1) on the fused path.
+
+``python benchmarks/hotpath.py`` writes ``BENCH_hotpath.json`` (the
+committed artifact).  ``--smoke`` runs tiny shapes and *asserts* the fused
+path's dispatch count is O(1) per round — the CI perf-smoke job's contract.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import repro.arms as arms
+from repro.arms import fused
+from repro.core.dp import DPConfig
+from repro.data.synthetic import make_gemini_like
+from repro.models.tabular import linear_model
+
+# the small tabular preset (scenarios preset "gemini/small": 32-feature
+# linear model), sized so every silo draws a real Poisson batch each round
+FEATURES = 32
+EXAMPLES_PER_SILO = 240
+
+
+def _make_setup(h: int, seed: int = 0):
+    silos = arms.normalize_participants(
+        make_gemini_like(seed=seed, n_total=EXAMPLES_PER_SILO * h,
+                         n_silos=h, n_features=FEATURES)
+    )
+    return linear_model(FEATURES), silos
+
+
+def _cfg(rounds: int, use_secagg: bool, fused_rounds: bool) -> arms.ArmConfig:
+    return arms.ArmConfig(
+        rounds=rounds, batch_size=64, lr=0.3, seed=0,
+        use_secagg=use_secagg, fused_rounds=fused_rounds,
+        dp=DPConfig(clip_norm=1.0, noise_multiplier=0.8, microbatch_size=8),
+    )
+
+
+def _run_once(arm: str, model, silos, cfg) -> tuple[float, int, int]:
+    """(wall seconds, jit dispatches, rounds completed) for one fresh run."""
+    fused.reset_jit_dispatches()
+    t0 = time.perf_counter()
+    rep = arms.run(arm, model, silos, cfg)
+    dt = time.perf_counter() - t0
+    return dt, fused.jit_dispatches(), rep.rounds_completed
+
+
+def measure(arm: str, h: int, *, use_secagg: bool, fused_rounds: bool,
+            r_lo: int, r_hi: int, repeats: int) -> dict:
+    """Marginal per-round wall/dispatch cost for one (arm, H, path) cell."""
+    model, silos = _make_setup(h)
+    # compile warmup: a fresh arm per run re-traces, so prime the XLA-level
+    # caches for both round counts before timing
+    _run_once(arm, model, silos, _cfg(2, use_secagg, fused_rounds))
+    walls, disps = [], []
+    for _ in range(repeats):
+        t_lo, d_lo, n_lo = _run_once(
+            arm, model, silos, _cfg(r_lo, use_secagg, fused_rounds))
+        t_hi, d_hi, n_hi = _run_once(
+            arm, model, silos, _cfg(r_hi, use_secagg, fused_rounds))
+        if n_hi <= n_lo:
+            raise RuntimeError(f"{arm} H={h}: no marginal rounds measured")
+        walls.append((t_hi - t_lo) / (n_hi - n_lo))
+        disps.append((d_hi - d_lo) / (n_hi - n_lo))
+    # interference only ever ADDS time: a stall in the short run drives a
+    # marginal negative, in the long run inflates it.  Drop the impossible
+    # (non-positive) samples and keep the least-interfered one — the
+    # standard min-of-repeats timing estimator, applied to marginals.  If
+    # every repeat was corrupted, record the cell as unmeasured (null)
+    # rather than fabricating a number.
+    positive = sorted(w for w in walls if w > 0)
+    return {
+        "arm": arm,
+        "hospitals": h,
+        "use_secagg": use_secagg,
+        "path": "fused" if fused_rounds else "loop",
+        "wall_per_round_s": positive[0] if positive else None,
+        "dispatches_per_round": min(disps),
+    }
+
+
+CELLS = [  # (arm, use_secagg) — the round arms the fused path covers
+    ("decaph", True),
+    ("decaph", False),
+    ("fl", False),
+    ("fedprox", False),
+]
+
+
+def collect(hs: list[int], r_lo: int, r_hi: int, repeats: int,
+            progress=lambda msg: None) -> dict:
+    rows = []
+    for h in hs:
+        for arm, secagg in CELLS:
+            for fused_rounds in (False, True):
+                row = measure(arm, h, use_secagg=secagg,
+                              fused_rounds=fused_rounds,
+                              r_lo=r_lo, r_hi=r_hi, repeats=repeats)
+                rows.append(row)
+                wall = row["wall_per_round_s"]
+                progress(
+                    f"{arm:8s} H={h:<3d} secagg={str(secagg):5s} "
+                    f"{row['path']:5s} "
+                    + (f"{wall*1e3:8.2f} ms/round" if wall is not None
+                       else "  (unmeasured: interference)")
+                    + f" {row['dispatches_per_round']:6.1f} disp/round"
+                )
+    speedups = {}
+    for h in hs:
+        for arm, secagg in CELLS:
+            pair = {
+                r["path"]: r for r in rows
+                if r["arm"] == arm and r["hospitals"] == h
+                and r["use_secagg"] == secagg
+            }
+            key = f"{arm}{'-secagg' if secagg else ''}-h{h}"
+            f_wall = pair["fused"]["wall_per_round_s"]
+            l_wall = pair["loop"]["wall_per_round_s"]
+            speedups[key] = {
+                # null when either side went unmeasured — never fabricated
+                "speedup": (l_wall / f_wall
+                            if f_wall is not None and l_wall is not None
+                            else None),
+                "loop_dispatches": pair["loop"]["dispatches_per_round"],
+                "fused_dispatches": pair["fused"]["dispatches_per_round"],
+            }
+    return {
+        "preset": "small-tabular (gemini/small: 32-feature linear model)",
+        "rounds_marginal": [r_lo, r_hi],
+        "repeats": repeats,
+        "rows": rows,
+        "speedups": speedups,
+    }
+
+
+def run(fast: bool = True) -> list[dict]:
+    """benchmarks/run.py entry point."""
+    hs = [5, 10] if fast else [5, 10, 20]
+    report = collect(hs, r_lo=3, r_hi=9 if fast else 15, repeats=1,
+                     progress=lambda m: print(m, file=sys.stderr))
+    return [
+        {
+            "name": (f"hotpath_{r['arm']}_h{r['hospitals']}"
+                     f"{'_secagg' if r['use_secagg'] else ''}_{r['path']}"),
+            "us_per_call": (r["wall_per_round_s"] or 0.0) * 1e6,
+            "derived": f"dispatches_per_round={r['dispatches_per_round']:.1f}",
+        }
+        for r in report["rows"]
+    ]
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny shapes; assert fused dispatches are O(1)")
+    p.add_argument("--out", default="BENCH_hotpath.json")
+    p.add_argument("--hospitals", type=int, nargs="+",
+                   default=[5, 10, 20])
+    p.add_argument("--rounds", type=int, nargs=2, default=[10, 50],
+                   metavar=("R_LO", "R_HI"))
+    p.add_argument("--repeats", type=int, default=5)
+    args = p.parse_args(argv)
+
+    if args.smoke:
+        args.hospitals, args.rounds, args.repeats = [4], [2, 6], 1
+
+    report = collect(args.hospitals, r_lo=args.rounds[0],
+                     r_hi=args.rounds[1], repeats=args.repeats,
+                     progress=lambda m: print(m, file=sys.stderr))
+
+    failures = []
+    for key, s in report["speedups"].items():
+        # the structural contract, asserted even in --smoke: a fused round
+        # is ONE cohort program launch, a loop round is >= H of them
+        if s["fused_dispatches"] > 2.0:
+            failures.append(
+                f"{key}: fused path dispatches "
+                f"{s['fused_dispatches']:.1f}/round (expected O(1))"
+            )
+        if s["loop_dispatches"] < s["fused_dispatches"]:
+            failures.append(f"{key}: loop path dispatched less than fused?")
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}", file=sys.stderr)
+    for key, s in sorted(report["speedups"].items()):
+        sp = (f"{s['speedup']:6.2f}x" if s["speedup"] is not None
+              else "   n/a")
+        print(f"{key:24s} speedup {sp}  "
+              f"dispatches {s['loop_dispatches']:.1f} -> "
+              f"{s['fused_dispatches']:.1f}")
+    if failures:
+        print("\n".join("FAIL: " + f for f in failures), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

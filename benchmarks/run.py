@@ -17,6 +17,7 @@ MODULES = [
     ("mia", "Fig 5: LiRA membership inference, FL vs DeCaPH"),
     ("secagg_cost", "Supp Fig 1 / Supp T1: SecAgg wall-clock + comm"),
     ("sim_report", "Systems: 5 arms on a heterogeneous trace + dropout recovery"),
+    ("hotpath", "Systems: fused round-step vs loop (wall/round + dispatches)"),
     ("pate_ablation", "Supp (Existing frameworks): PATE vs DeCaPH ablation"),
     ("accountant_table", "Methods: RDP accounting for the paper's budgets"),
     ("kernel_bench", "Kernels: oracle timings + traffic ratios"),

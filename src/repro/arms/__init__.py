@@ -12,8 +12,8 @@ wire) with no notion of time; the backends execute it either idealized
                       nodes=nodes, topo=topo)
 
 Registered arms: decaph, fl (FedSGD/FedAvg), fedprox (proximal-term FedAvg),
-primia (local-DP FL), local (silo-only), gossip (async D-PSGD), gossip-dp
-(local-DP D-PSGD).
+scaffold (control-variate FedAvg), primia (local-DP FL), local (silo-only),
+gossip (async D-PSGD), gossip-dp (local-DP D-PSGD).
 """
 
 from __future__ import annotations
@@ -48,6 +48,7 @@ from repro.arms import gossip as _gossip          # noqa: F401
 from repro.arms import gossip_dp as _gossip_dp    # noqa: F401
 from repro.arms import local as _local            # noqa: F401
 from repro.arms import primia as _primia          # noqa: F401
+from repro.arms import scaffold as _scaffold      # noqa: F401
 
 
 def run(

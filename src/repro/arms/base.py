@@ -106,6 +106,7 @@ class ArmConfig:
     fl_local_steps: int = 1        # >1 = FedAvg (weight averaging) for "fl"
     fedprox_mu: float = 0.1        # proximal-term weight for "fedprox"
     leader_strategy: str = "uniform"
+    fused_rounds: bool = True      # cohort-batched round step (DESIGN.md §7)
     seed: int = 0
     eval_every: int = 0            # 0 = never
     max_pad_batch: int | None = None  # static padded per-silo batch (jit shapes)
@@ -230,6 +231,11 @@ class AggregationServices:
     these" — they never see masks, shares, or ciphertexts.
     """
 
+    # When the backend ran the arm's fused round-step it may hand the
+    # already-reduced cohort aggregate back to ``aggregate`` here (the
+    # idealized backend with plain sums); ``None`` means "sum it yourself".
+    fused_reduced: PyTree | None = None
+
     def sum_sizes(self, sizes: Sequence[int]) -> int:  # pragma: no cover
         raise NotImplementedError
 
@@ -319,6 +325,30 @@ class RoundArm(Arm):
     ) -> Contribution | None:
         """Participant ``i``'s upload for round ``t`` (None = sits out)."""
         raise NotImplementedError
+
+    def fused_round(
+        self,
+        params: PyTree,
+        active: Sequence[int],
+        t: int,
+        rng: np.random.Generator,
+        n_shares: int,
+        need_payloads: bool,
+        need_reduced: bool = True,
+    ) -> tuple[dict[int, Contribution], PyTree | None] | None:
+        """The cohort-batched hot path (DESIGN.md §7): every active
+        participant's contribution in ONE jit dispatch with ONE host sync
+        for metrics, plus (optionally) the in-jit reduced cohort aggregate.
+
+        Must consume ``rng`` exactly as the ``contribution()`` loop would.
+        Return ``None`` to fall back to the per-participant loop (the
+        default — arms opt in).  ``need_payloads=False`` means the backend
+        will consume the reduced tree and per-participant payloads may be
+        withheld (stay on device, never unstacked); ``need_reduced=False``
+        means the backend will sum delivered payloads itself (sim
+        transport, SecAgg) and the in-jit reduction may be skipped.
+        """
+        return None
 
     def aggregate(
         self,

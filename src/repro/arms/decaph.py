@@ -25,6 +25,7 @@ from repro.arms.base import (
     sgd_update,
     tree_div,
 )
+from repro.arms import fused
 from repro.arms.registry import register
 from repro.core import dp as dp_lib
 from repro.core.accountant import RDPAccountant, steps_for_epsilon
@@ -57,13 +58,42 @@ class DeCaPHArm(RoundArm):
             delta=cfg.dp.delta,
         )
         self._key = jax.random.key(cfg.seed)
-        self._clipped_sum = jax.jit(
+        self._clipped_sum = fused.instrumented_jit(
             lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
                 model.loss_fn, p, b,
                 clip_norm=cfg.dp.clip_norm,
                 microbatch_size=min(cfg.dp.microbatch_size, self.pad),
                 mask=m,
             )
+        )
+
+        def cohort_step(params, bx, by, masks, salt_t, idxs, n_shares):
+            """Every participant's noised clipped sum + the cohort total in
+            one program; noise keys fold in ``(salt_t, idx)`` exactly as the
+            per-participant path does, so batching changes no draw."""
+
+            def one(bx_i, by_i, m_i, idx):
+                g_sum, loss = dp_lib.per_example_clipped_grad_sum(
+                    model.loss_fn, params, {"x": bx_i, "y": by_i},
+                    clip_norm=cfg.dp.clip_norm,
+                    microbatch_size=min(cfg.dp.microbatch_size, self.pad),
+                    mask=m_i,
+                )
+                nkey = jax.random.fold_in(
+                    jax.random.fold_in(self._key, salt_t), idx
+                )
+                noised = dp_lib.tree_add_noise(
+                    g_sum, nkey, clip_norm=cfg.dp.clip_norm,
+                    noise_multiplier=cfg.dp.noise_multiplier,
+                    n_shares=n_shares,
+                )
+                return noised, loss
+
+            stack, losses = jax.vmap(one)(bx, by, masks, idxs)
+            return stack, fused.seq_tree_sum(stack, bx.shape[0]), losses
+
+        self._fused_step, self._fused_step_slim = fused.instrumented_jit_pair(
+            cohort_step, static_argnums=(6,)
         )
 
     # --- schedule -------------------------------------------------------------
@@ -108,6 +138,23 @@ class DeCaPHArm(RoundArm):
             noise_multiplier=self.cfg.dp.noise_multiplier, n_shares=n_shares,
         )
         return Contribution(payload=noised, size=k, loss=float(loss))
+
+    def fused_round(self, params, active, t, rng, n_shares, need_payloads,
+                    need_reduced=True):
+        cb = fused.stack_poisson(
+            rng, self.participants, active, self.rate, self.pad
+        )
+        args = (params, cb.x, cb.y, cb.masks,
+                np.int32(_NOISE_SALT + t), np.asarray(active, np.int32),
+                n_shares)
+        if need_reduced:
+            stack, reduced, losses = self._fused_step(*args)
+        else:
+            (stack, losses), reduced = self._fused_step_slim(*args), None
+        contribs = fused.build_contributions(
+            active, stack, losses, cb.sizes, need_payloads
+        )
+        return contribs, reduced
 
     def aggregate(
         self,

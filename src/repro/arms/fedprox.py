@@ -44,6 +44,19 @@ class FedProxArm(FLArm):
         self.local_steps = max(2, cfg.fl_local_steps)
         self.mu = cfg.fedprox_mu
 
+    # --- fused hot path (the FLArm cohort program with a proximal term) ---
+
+    def _local_steps(self) -> int:
+        return self.local_steps
+
+    def _local_step_grad(self, local, batch, mask, k, global_params):
+        g = super()._local_step_grad(local, batch, mask, k, global_params)
+        # grad of (mu/2)||w - w_global||^2 at the local iterate
+        return jax.tree_util.tree_map(
+            lambda gl, wl, wg: gl + self.mu * (wl - wg),
+            g, local, global_params,
+        )
+
     def contribution(self, params, i, t, rng, n_shares):
         part = self.participants[i]
         local, consumed = params, 0

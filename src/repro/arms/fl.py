@@ -12,6 +12,7 @@ from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.arms.base import (
     AggregationServices,
@@ -26,6 +27,7 @@ from repro.arms.base import (
     sgd_update,
     tree_div,
 )
+from repro.arms import fused
 from repro.arms.registry import register
 
 
@@ -50,7 +52,55 @@ class FLArm(RoundArm):
                 return jnp.sum(losses * m)
             return jax.grad(masked_loss)(p)
 
-        self._batch_grad = jax.jit(batch_grad)
+        self._batch_grad_raw = batch_grad
+        self._batch_grad = fused.instrumented_jit(batch_grad)
+
+        def cohort_sgd(params, bx, by, masks):
+            """FedSGD: every client's masked-sum gradient + the cohort
+            total, one program."""
+            stack = jax.vmap(
+                lambda bx_i, by_i, m_i: batch_grad(
+                    params, {"x": bx_i, "y": by_i}, m_i
+                )
+            )(bx, by, masks)
+            return stack, fused.seq_tree_sum(stack, bx.shape[0])
+
+        def cohort_avg(params, bx, by, masks, counts, weights):
+            """FedAvg-family: every client's K local steps (scan) + the
+            size-weighted average, one program.  Empty Poisson draws skip
+            the step exactly like the loop path's ``continue``."""
+
+            def one(bxs, bys, ms, ks):
+                def step(local, inp):
+                    bx_i, by_i, m_i, k_i = inp
+                    g = self._local_step_grad(
+                        local, {"x": bx_i, "y": by_i}, m_i, k_i, params
+                    )
+                    new = sgd_update(local, g, cfg.lr, cfg.weight_decay)
+                    new = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(k_i > 0, a, b), new, local
+                    )
+                    return new, None
+
+                local, _ = jax.lax.scan(step, params, (bxs, bys, ms, ks))
+                return local
+
+            stack = jax.vmap(one)(bx, by, masks, counts)
+            return stack, fused.seq_weighted_sum(stack, weights, bx.shape[0])
+
+        self._fused_sgd, self._fused_sgd_slim = \
+            fused.instrumented_jit_pair(cohort_sgd)
+        self._fused_avg, self._fused_avg_slim = \
+            fused.instrumented_jit_pair(cohort_avg)
+
+    def _local_step_grad(self, local, batch, mask, k, global_params):
+        """One local step's gradient (FedProx overrides to add its proximal
+        term).  ``k`` is the draw's real example count (traced int32)."""
+        g = self._batch_grad_raw(local, batch, mask)
+        return tree_div(g, jnp.maximum(k, 1))
+
+    def _local_steps(self) -> int:
+        return self.cfg.fl_local_steps
 
     def quorum(self) -> tuple[int, int | None]:
         # server-based FL stalls whenever the hub is offline
@@ -77,6 +127,38 @@ class FLArm(RoundArm):
             consumed += k
         return Contribution(payload=local, size=consumed)
 
+    def fused_round(self, params, active, t, rng, n_shares, need_payloads,
+                    need_reduced=True):
+        if not self.fedavg:
+            cb = fused.stack_poisson(
+                rng, self.participants, active, self.rate, self.pad
+            )
+            if need_reduced:
+                stack, reduced = self._fused_sgd(params, cb.x, cb.y, cb.masks)
+            else:
+                (stack,) = self._fused_sgd_slim(params, cb.x, cb.y, cb.masks)
+                reduced = None
+            return fused.build_contributions(
+                active, stack, None, cb.sizes, need_payloads
+            ), reduced
+        cb = fused.stack_poisson(
+            rng, self.participants, active, self.rate, self.pad,
+            steps=self._local_steps(),
+        )
+        # f32 weights now so the in-jit weighted sum multiplies by exactly
+        # the scalars the eager size-weighted average would
+        sizes = [float(len(self.participants[i])) for i in active]
+        wsum = sum(sizes)
+        weights = np.asarray([w / wsum for w in sizes], np.float32)
+        args = (params, cb.x, cb.y, cb.masks, cb.counts, weights)
+        if need_reduced:
+            stack, reduced = self._fused_avg(*args)
+        else:
+            (stack,), reduced = self._fused_avg_slim(*args), None
+        return fused.build_contributions(
+            active, stack, None, cb.sizes, need_payloads
+        ), reduced
+
     def aggregate(
         self,
         params,
@@ -87,6 +169,10 @@ class FLArm(RoundArm):
         if not order:
             return RoundOutcome(params, stepped=False)
         if self.fedavg:  # size-weighted weight averaging
+            if services.fused_reduced is not None:
+                # the fused program already holds the weighted average
+                return RoundOutcome(services.fused_reduced, stepped=True,
+                                    aggregate_batch=self.cfg.batch_size)
             weights = [float(len(self.participants[i])) for i in order]
             wsum = sum(weights)
             params = jax.tree_util.tree_map(

@@ -25,6 +25,7 @@ from repro.arms.base import (
     sgd_update,
     tree_div,
 )
+from repro.arms import fused
 from repro.arms.registry import register
 from repro.core import dp as dp_lib
 from repro.core.accountant import RDPAccountant, steps_for_epsilon
@@ -71,7 +72,7 @@ class PriMIAArm(RoundArm):
         else:
             self.max_rounds = [cfg.rounds] * self.h
         self._key = jax.random.key(cfg.seed)
-        self._clipped_sum = jax.jit(
+        self._clipped_sum = fused.instrumented_jit(
             lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
                 model.loss_fn, p, b,
                 clip_norm=cfg.dp.clip_norm,

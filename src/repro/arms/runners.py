@@ -23,7 +23,6 @@ import itertools
 from typing import Any, Mapping, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.arms.base import (
@@ -41,6 +40,7 @@ from repro.core.secagg import (
     SecAggConfig,
     secagg_recovery_bytes,
     secure_sum,
+    secure_sum_ints,
 )
 from repro.sim.engine import (
     ComputeDone,
@@ -72,21 +72,29 @@ def default_topology(kind: str, n: int, center: int = 0) -> Topology:
 class _IdealServices(AggregationServices):
     """Free, lossless aggregation; SecAgg runs over the raw payload trees."""
 
-    def __init__(self, cfg, n: int, t: int, secure: bool) -> None:
+    def __init__(self, cfg, n: int, t: int, secure: bool,
+                 fused_reduced: PyTree | None = None,
+                 cover: frozenset[int] | None = None) -> None:
         self._cfg, self._n, self._t, self._secure = cfg, n, t, secure
+        self.fused_reduced = fused_reduced
+        self._cover = cover
 
     def sum_sizes(self, sizes: Sequence[int]) -> int:
         if self._secure:
-            # aggregate mini-batch size ||B^t|| via SecAgg (integer-exact)
-            total = secure_sum(
-                [jnp.asarray([float(s)]) for s in sizes],
-                SecAggConfig(self._n, frac_bits=0,
-                             seed=self._cfg.seed * 7919 + self._t),
-            )[0]
-            return int(round(float(total)))
+            # aggregate mini-batch size ||B^t|| via SecAgg — summed in the
+            # field as integers (exact, no float fixed-point round-trip)
+            return secure_sum_ints(
+                list(sizes), n_participants=self._n,
+                seed=self._cfg.seed * 7919 + self._t,
+            )
         return int(sum(sizes))
 
     def sum_payloads(self, payloads: Mapping[int, PyTree]) -> PyTree:
+        if (self.fused_reduced is not None
+                and set(payloads) == self._cover):
+            # the fused round-step already reduced the cohort in-jit, in
+            # the same ascending-slot order an eager tree_sum would use
+            return self.fused_reduced
         trees = [payloads[i] for i in sorted(payloads)]
         if self._secure:
             if len(trees) != self._n:
@@ -98,6 +106,12 @@ class _IdealServices(AggregationServices):
                 trees,
                 SecAggConfig(self._n, self._cfg.secagg_frac_bits,
                              seed=self._cfg.seed + self._t),
+            )
+        if any(tr is None for tr in trees):
+            raise RuntimeError(
+                "fused round withheld per-participant payloads but the "
+                "reduced sum does not cover this aggregation — arm and "
+                "backend disagree about the cohort"
             )
         return tree_sum(trees)
 
@@ -147,17 +161,31 @@ class LocalRunner:
             if not active:
                 break  # nobody left who can contribute
             dst = arm.facilitator(t, active)
-            contribs: dict[int, Contribution] = {}
-            for i in active:  # ascending index: the arm-contract rng order
-                c = arm.contribution(params, i, t, rng, len(active))
-                if c is not None:
-                    contribs[i] = c
+            secure = arm.secure_uploads and cfg.use_secagg
+            contribs: dict[int, Contribution] | None = None
+            reduced = None
+            if cfg.fused_rounds:
+                # one dispatch for the whole cohort; with SecAgg off the
+                # reduced aggregate never leaves the device either
+                fr = arm.fused_round(params, active, t, rng, len(active),
+                                     need_payloads=secure,
+                                     need_reduced=not secure)
+                if fr is not None:
+                    contribs, reduced = fr
+            if contribs is None:
+                contribs = {}
+                for i in active:  # ascending index: the arm-contract rng order
+                    c = arm.contribution(params, i, t, rng, len(active))
+                    if c is not None:
+                        contribs[i] = c
             if not contribs:
                 if arm.empty_break:
                     break
                 continue
             services = _IdealServices(
-                cfg, h, t, secure=arm.secure_uploads and cfg.use_secagg
+                cfg, h, t, secure=secure,
+                fused_reduced=None if secure else reduced,
+                cover=frozenset(contribs),
             )
             outcome = arm.aggregate(params, contribs, services)
             if outcome.stepped:
@@ -431,11 +459,22 @@ class SimRunner:
                 continue
             dst = arm.facilitator(t, active)
 
-            contribs: dict[int, Contribution] = {}
-            for i in active:  # ascending index: the arm-contract rng order
-                c = arm.contribution(params, i, t, rng, len(active))
-                if c is not None:
-                    contribs[i] = c
+            contribs: dict[int, Contribution] | None = None
+            if cfg.fused_rounds:
+                # one dispatch computes the whole cohort's contributions;
+                # the transport below still ships them one by one
+                # delivery may be partial, so the backend sums what arrives:
+                # skip the in-jit reduction (XLA DCEs it in the slim variant)
+                fr = arm.fused_round(params, active, t, rng, len(active),
+                                     need_payloads=True, need_reduced=False)
+                if fr is not None:
+                    contribs, _ = fr
+            if contribs is None:
+                contribs = {}
+                for i in active:  # ascending index: the arm-contract rng order
+                    c = arm.contribution(params, i, t, rng, len(active))
+                    if c is not None:
+                        contribs[i] = c
             if not contribs:
                 if arm.empty_break:
                     break

@@ -17,6 +17,7 @@ an optional timing section only the sim backend fills in).
 
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from typing import Sequence
 
@@ -70,6 +71,11 @@ def _deprecated(old: str, arm: str) -> None:
 def _run_ideal(arm_name: str, model: Model,
                participants: Sequence[Participant],
                cfg: ArmConfig) -> RunReport:
+    # The shims promise the PRE-refactor trajectories seed-for-seed.  The
+    # fused cohort step (DESIGN.md §7) reproduces the same draws but vmaps
+    # the per-participant float math, which re-associates at the ulp level —
+    # so the historical per-participant loop is pinned here.
+    cfg = dataclasses.replace(cfg, fused_rounds=False)
     return LocalRunner().run(get(arm_name)(model, participants, cfg))
 
 

@@ -37,6 +37,7 @@ dropout recovery in ``tests/test_secagg_dropout.py``.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any, Sequence
 
 import jax
@@ -77,15 +78,110 @@ def _decode(v: np.ndarray, cfg: SecAggConfig) -> np.ndarray:
     return (v.astype(np.float64) / cfg.scale).astype(np.float32)
 
 
-def _pair_key(base: jax.Array, i: int, j: int) -> jax.Array:
-    """Shared PRG seed for the (unordered) pair {i, j}; i < j canonical."""
-    lo, hi = (i, j) if i < j else (j, i)
-    return jax.random.fold_in(jax.random.fold_in(base, lo), hi)
+# -- vectorized pair-pad machinery (DESIGN.md §7) ----------------------------
+#
+# Mask generation is the round's O(H^2 * leaves) hot spot when done naively:
+# every (participant, peer, leaf) triple used to be its own fold_in + PRG
+# dispatch, and each unordered pair's pad was generated twice (once with
+# ``+`` by the lower index, once with ``-`` by the higher).  The vectorized
+# path generates the pad of every unordered pair {lo, hi} exactly ONCE per
+# round as a single batched PRG call over the flattened field vector, then
+# applies the sign convention (lo adds, hi subtracts — so every pad appears
+# exactly once with each sign and cancels in the field sum) with stacked
+# scatter-adds.  The legacy per-leaf loop survives as a reference
+# implementation in ``tests/_legacy_secagg.py``; aggregates are bit-identical
+# because mask cancellation is exact either way.
 
 
-def _prg_mask(key: jax.Array, shape: tuple[int, ...]) -> np.ndarray:
-    """Uniform field elements from the pairwise seed."""
-    return np.asarray(jax.random.bits(key, shape, dtype=jnp.uint32))
+def _pairs(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Index arrays (los, his) over the n*(n-1)/2 unordered pairs, lo < hi."""
+    lo, hi = np.triu_indices(n, k=1)
+    return lo.astype(np.uint32), hi.astype(np.uint32)
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _batched_pair_pads(
+    base_key: jax.Array, los: jax.Array, his: jax.Array, length: int
+) -> jax.Array:
+    """(n_pairs, length) uniform field elements — one dispatch per round."""
+
+    def one(lo, hi):
+        k = jax.random.fold_in(jax.random.fold_in(base_key, lo), hi)
+        return jax.random.bits(k, (length,), dtype=jnp.uint32)
+
+    return jax.vmap(one)(los, his)
+
+
+_SEED_PAD_KEY = jax.random.key(0x5ECA66)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _batched_seed_pads(
+    hi_words: jax.Array, lo_words: jax.Array, length: int
+) -> jax.Array:
+    """(n_seeds, length) pads from 61-bit DH agreements split into 32-bit
+    words (the seed, not the pair indices, keys the PRG — so a pad can be
+    regenerated from a Shamir-reconstructed secret during recovery)."""
+
+    def one(hi, lo):
+        k = jax.random.fold_in(jax.random.fold_in(_SEED_PAD_KEY, hi), lo)
+        return jax.random.bits(k, (length,), dtype=jnp.uint32)
+
+    return jax.vmap(one)(hi_words, lo_words)
+
+
+def _seed_words(seeds: Sequence[int]) -> tuple[np.ndarray, np.ndarray]:
+    arr = [int(s) for s in seeds]
+    hi = np.asarray([s >> 32 for s in arr], np.uint32)
+    lo = np.asarray([s & 0xFFFFFFFF for s in arr], np.uint32)
+    return hi, lo
+
+
+def _signed_mask_rows(
+    pads: np.ndarray, los: np.ndarray, his: np.ndarray, n: int
+) -> np.ndarray:
+    """(n, L) net masks: row i = sum_{i=lo} pad - sum_{i=hi} pad (mod 2^32)."""
+    masks = np.zeros((n, pads.shape[1]), _FIELD_DTYPE)
+    with np.errstate(over="ignore"):  # modular field arithmetic
+        np.add.at(masks, los.astype(np.intp), pads)
+        np.subtract.at(masks, his.astype(np.intp), pads)
+    return masks
+
+
+def _flatten_encoded(
+    leaves: Sequence[Any], template: Sequence[Any], cfg: SecAggConfig
+) -> np.ndarray:
+    """Encode every leaf and concatenate into one flat field vector."""
+    out = []
+    for li, (x, tmpl) in enumerate(zip(leaves, template)):
+        shape = tuple(np.shape(tmpl))
+        if tuple(np.shape(x)) != shape:
+            raise ValueError(f"leaf {li} shape {np.shape(x)} != {shape}")
+        out.append(_encode(x, cfg).ravel())
+    return np.concatenate(out) if out else np.zeros((0,), _FIELD_DTYPE)
+
+
+def _split_flat(flat: np.ndarray, template: Sequence[Any]) -> list[np.ndarray]:
+    """Inverse of ``_flatten_encoded``: flat vector -> per-leaf arrays."""
+    out, off = [], 0
+    for leaf in template:
+        shape = tuple(np.shape(leaf))
+        # np.prod(()) == 1, so scalars count 1 and empty leaves count 0 —
+        # matching exactly what _flatten_encoded ravels
+        size = int(np.prod(shape))
+        out.append(flat[off:off + size].reshape(shape))
+        off += size
+    return out
+
+
+def _stack_ciphertexts(
+    uploads: Sequence[list[np.ndarray]],
+) -> np.ndarray:
+    """(n_uploads, L) field matrix from per-leaf ciphertext lists."""
+    return np.stack([
+        np.concatenate([np.asarray(u).ravel() for u in up])
+        for up in uploads
+    ])
 
 
 class SecAggSession:
@@ -95,34 +191,40 @@ class SecAggSession:
         self.cfg = cfg
         self.template = template
         self._leaves, self._treedef = jax.tree_util.tree_flatten(template)
+        self._length = int(sum(
+            np.prod(np.shape(x)) for x in self._leaves
+        ))
         self._base_key = jax.random.key(cfg.seed)
+        self._los, self._his = _pairs(cfg.n_participants)
+        self._masks: np.ndarray | None = None  # (n, L), built lazily
+
+    def _flat_masks(self) -> np.ndarray:
+        """Every participant's net mask, from one batched PRG call."""
+        if self._masks is None:
+            if len(self._los):
+                pads = np.asarray(_batched_pair_pads(
+                    self._base_key, self._los, self._his, self._length
+                ))
+            else:  # single participant: nothing to mask against
+                pads = np.zeros((0, self._length), _FIELD_DTYPE)
+            self._masks = _signed_mask_rows(
+                pads, self._los, self._his, self.cfg.n_participants
+            )
+        return self._masks
 
     def mask_for(self, i: int) -> list[np.ndarray]:
         """Net mask participant i applies (sums to zero over participants)."""
-        masks = []
-        for li, leaf in enumerate(self._leaves):
-            key_leaf = jax.random.fold_in(self._base_key, 1000 + li)
-            shape = tuple(np.shape(leaf))
-            m = np.zeros(shape, _FIELD_DTYPE)
-            with np.errstate(over="ignore"):  # modular field arithmetic
-                for j in range(self.cfg.n_participants):
-                    if j == i:
-                        continue
-                    pk = _pair_key(key_leaf, i, j)
-                    pad = _prg_mask(pk, shape)
-                    # i adds the pad if i < j, subtracts if i > j: cancels in sum.
-                    m = (m + pad) if i < j else (m - pad)
-            masks.append(m)
-        return masks
+        return _split_flat(self._flat_masks()[i], self._leaves)
 
     def upload(self, i: int, values: PyTree) -> list[np.ndarray]:
         """Masked ciphertext participant i sends to the leader."""
         leaves = jax.tree_util.tree_leaves(values)
         if len(leaves) != len(self._leaves):
             raise ValueError("pytree structure mismatch")
-        masks = self.mask_for(i)
         with np.errstate(over="ignore"):  # modular wraparound is the protocol
-            return [_encode(x, self.cfg) + m for x, m in zip(leaves, masks)]
+            flat = _flatten_encoded(leaves, self._leaves, self.cfg)
+            flat = flat + self._flat_masks()[i]
+        return _split_flat(flat, self._leaves)
 
     def aggregate(self, uploads: Sequence[list[np.ndarray]]) -> PyTree:
         """Leader-side sum of ciphertexts; masks cancel exactly in Z_2^32."""
@@ -134,11 +236,14 @@ class SecAggSession:
                 "DropoutRobustSession if participants may drop out"
             )
         _check_uploads(uploads, self._leaves)
-        total = [np.zeros(np.shape(x), _FIELD_DTYPE) for x in self._leaves]
         with np.errstate(over="ignore"):  # modular wraparound is the protocol
-            for up in uploads:
-                total = [t + u for t, u in zip(total, up)]
-        decoded = [jnp.asarray(_decode(t, self.cfg)) for t in total]
+            total = _stack_ciphertexts(uploads).sum(
+                axis=0, dtype=_FIELD_DTYPE
+            )
+        decoded = [
+            jnp.asarray(_decode(t, self.cfg))
+            for t in _split_flat(total, self._leaves)
+        ]
         return jax.tree_util.tree_unflatten(self._treedef, decoded)
 
 
@@ -174,6 +279,40 @@ def secure_sum(values: Sequence[PyTree], cfg: SecAggConfig) -> PyTree:
     session = SecAggSession(cfg, values[0])
     uploads = [session.upload(i, v) for i, v in enumerate(values)]
     return session.aggregate(uploads)
+
+
+def secure_sum_ints(values: Sequence[int], *, n_participants: int,
+                    seed: int = 0) -> int:
+    """Exact integer SecAgg sum — no float/fixed-point round-trip.
+
+    Batch sizes (and any other small non-negative integer telemetry) embed
+    directly into Z_2^32; the masked field sum is exact as long as the true
+    total stays below 2^31 (it is validated).  This replaces the old route
+    of ``frac_bits=0`` fixed-point encoding of ``float(size)``, which
+    quantised through float64 for no reason.
+    """
+    values = [int(v) for v in values]
+    if len(values) != n_participants:
+        raise ValueError(
+            f"secure_sum_ints: {len(values)} values for "
+            f"{n_participants} participants — every participant must "
+            "contribute"
+        )
+    if any(v < 0 for v in values):
+        raise ValueError("secure_sum_ints: negative value")
+    if sum(values) >= (1 << (_FIELD_BITS - 1)):
+        raise ValueError("secure_sum_ints: total overflows the field")
+    base_key = jax.random.key(seed)
+    los, his = _pairs(n_participants)
+    if len(los):
+        pads = np.asarray(_batched_pair_pads(base_key, los, his, 1))
+    else:
+        pads = np.zeros((0, 1), _FIELD_DTYPE)
+    masks = _signed_mask_rows(pads, los, his, n_participants)[:, 0]
+    with np.errstate(over="ignore"):  # modular field arithmetic
+        ciphertexts = np.asarray(values, np.uint64).astype(_FIELD_DTYPE) + masks
+        total = int(ciphertexts.sum(dtype=_FIELD_DTYPE))
+    return total
 
 
 # --------------------------------------------------------------------------
@@ -267,6 +406,11 @@ class DropoutRobustSession:
             raise ValueError(f"threshold {self.threshold} not in [2, {n}]")
         self.template = template
         self._leaves, self._treedef = jax.tree_util.tree_flatten(template)
+        self._length = int(sum(
+            np.prod(np.shape(x)) for x in self._leaves
+        ))
+        self._los, self._his = _pairs(n)
+        self._masks: np.ndarray | None = None  # (n, L), built lazily
         # Each participant's local randomness (one stream per party would be
         # the deployment picture; a single seeded stream keeps tests exact).
         rng = np.random.default_rng(np.uint64(cfg.seed) ^ np.uint64(0x5ECA66))
@@ -289,36 +433,35 @@ class DropoutRobustSession:
             self.public_keys[other], self._secret_keys[holder], _SHAMIR_PRIME
         )
 
-    @staticmethod
-    def _pad_from_seed(
-        seed: int, leaf_index: int, shape: tuple[int, ...]
-    ) -> np.ndarray:
-        key = jax.random.fold_in(
-            jax.random.key(seed % ((1 << 63) - 1)), leaf_index
-        )
-        return _prg_mask(key, shape)
+    def _pads_from_seeds(self, seeds: Sequence[int]) -> np.ndarray:
+        """(len(seeds), L) pads from DH agreements, one batched PRG call."""
+        if not seeds:
+            return np.zeros((0, self._length), _FIELD_DTYPE)
+        hi, lo = _seed_words(seeds)
+        return np.asarray(_batched_seed_pads(hi, lo, self._length))
+
+    def _flat_masks(self) -> np.ndarray:
+        """Every participant's net mask; each pair's pad generated once."""
+        if self._masks is None:
+            seeds = [
+                self._pair_seed(int(lo), int(hi))
+                for lo, hi in zip(self._los, self._his)
+            ]
+            pads = self._pads_from_seeds(seeds)
+            self._masks = _signed_mask_rows(
+                pads, self._los, self._his, self.cfg.n_participants
+            )
+        return self._masks
 
     def upload(self, i: int, values: PyTree) -> list[np.ndarray]:
         """Masked ciphertext from participant i (pads vs. every peer)."""
         leaves = jax.tree_util.tree_leaves(values)
         if len(leaves) != len(self._leaves):
             raise ValueError("pytree structure mismatch")
-        out = []
         with np.errstate(over="ignore"):  # modular field arithmetic
-            for li, leaf in enumerate(leaves):
-                shape = tuple(np.shape(self._leaves[li]))
-                if tuple(np.shape(leaf)) != shape:
-                    raise ValueError(
-                        f"leaf {li} shape {np.shape(leaf)} != {shape}"
-                    )
-                v = _encode(leaf, self.cfg)
-                for j in range(self.cfg.n_participants):
-                    if j == i:
-                        continue
-                    pad = self._pad_from_seed(self._pair_seed(i, j), li, shape)
-                    v = (v + pad) if i < j else (v - pad)
-                out.append(v)
-        return out
+            flat = _flatten_encoded(leaves, self._leaves, self.cfg)
+            flat = flat + self._flat_masks()[i]
+        return _split_flat(flat, self._leaves)
 
     # -- recovery -----------------------------------------------------------
 
@@ -348,25 +491,29 @@ class DropoutRobustSession:
                 f"{self.threshold}: cannot reconstruct dropped masks"
             )
         _check_uploads([uploads[s] for s in survivors], self._leaves)
-        total = [np.zeros(np.shape(x), _FIELD_DTYPE) for x in self._leaves]
         with np.errstate(over="ignore"):
-            for s in survivors:
-                total = [t + u for t, u in zip(total, uploads[s])]
+            total = _stack_ciphertexts(
+                [uploads[s] for s in survivors]
+            ).sum(axis=0, dtype=_FIELD_DTYPE)
             for d in dropped:
                 # Any `threshold` survivors' shares reconstruct u_d exactly.
                 shares = self.recovery_shares(d, survivors[: self.threshold])
                 u_d = shamir_reconstruct(shares)
-                for j in survivors:
-                    seed = pow(self.public_keys[j], u_d, _SHAMIR_PRIME)
-                    for li in range(len(total)):
-                        pad = self._pad_from_seed(
-                            seed, li, tuple(np.shape(self._leaves[li]))
-                        )
-                        # Survivor j applied +pad if j < d else -pad; remove.
-                        total[li] = (
-                            total[li] - pad if j < d else total[li] + pad
-                        )
-        decoded = [jnp.asarray(_decode(t, self.cfg)) for t in total]
+                # Regenerate every survivor-side pad involving d from the
+                # reconstructed secret (one batched PRG call per dropped
+                # party) and cancel: survivor j applied +pad if j < d else
+                # -pad, so subtract for j < d and add back for j > d.
+                pads = self._pads_from_seeds([
+                    pow(self.public_keys[j], u_d, _SHAMIR_PRIME)
+                    for j in survivors
+                ])
+                before = np.asarray([j < d for j in survivors])
+                total = total - pads[before].sum(axis=0, dtype=_FIELD_DTYPE)
+                total = total + pads[~before].sum(axis=0, dtype=_FIELD_DTYPE)
+        decoded = [
+            jnp.asarray(_decode(t, self.cfg))
+            for t in _split_flat(total, self._leaves)
+        ]
         return jax.tree_util.tree_unflatten(self._treedef, decoded)
 
 

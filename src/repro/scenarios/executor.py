@@ -10,11 +10,20 @@ forked) — and every fresh result is persisted, making sweeps resumable.
 JAX-heavy imports happen inside functions: a fully-cached sweep never
 builds models, data or backends (it still pays the one arm-registry import
 that sweep-axis expansion needs — see ``grid._registered_arms``).
+
+Alongside the *result* cache sits a persistent *compilation* cache
+(``<result-cache-root>/jit-cache``, DESIGN.md §7): every pool worker is a
+fresh spawn-context process, and before it, each worker re-traced and
+re-compiled programs every other worker (and every previous sweep) had
+already built.  Wiring JAX's persistent compilation cache into the worker
+initializer makes compiled programs a sweep-level artifact: cell N's
+compile is cell N+1's disk hit, across processes and across invocations.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 import time
 from concurrent.futures import ProcessPoolExecutor
@@ -23,6 +32,32 @@ from typing import Callable, Sequence
 from repro.scenarios import presets as presets_lib
 from repro.scenarios.cache import ResultCache
 from repro.scenarios.spec import ScenarioSpec
+
+logger = logging.getLogger(__name__)
+
+JIT_CACHE_SUBDIR = "jit-cache"
+
+
+def enable_compilation_cache(cache_root: str) -> None:
+    """Point JAX's persistent compilation cache under the sweep cache.
+
+    Zero thresholds: sweep programs are many and small, and the default
+    min-compile-time / min-entry-size gates would skip exactly the tiny
+    programs whose per-worker recompiles dominate a parallel sweep.
+    Failure is non-fatal (older jaxlibs): the sweep still runs, it just
+    recompiles as before.
+    """
+    import os
+
+    import jax
+
+    path = os.path.join(str(cache_root), JIT_CACHE_SUBDIR)
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    except Exception as e:  # pragma: no cover - depends on jax version
+        logger.warning("persistent compilation cache unavailable: %s", e)
 
 
 def build_scenario(spec: ScenarioSpec):
@@ -107,6 +142,11 @@ def run_spec(spec: ScenarioSpec) -> dict:
     }
 
 
+def _pool_init(cache_root: str) -> None:
+    """Worker initializer: persistent jit cache before any JAX import."""
+    enable_compilation_cache(cache_root)
+
+
 def _pool_cell(spec_dict: dict) -> dict:
     """Top-level pool target (must be picklable under spawn)."""
     return run_spec(ScenarioSpec.from_dict(spec_dict))
@@ -168,7 +208,9 @@ def run_sweep(
             ctx = mp.get_context("spawn")
             first_error: BaseException | None = None
             with ProcessPoolExecutor(max_workers=min(jobs, len(pending)),
-                                     mp_context=ctx) as pool:
+                                     mp_context=ctx,
+                                     initializer=_pool_init,
+                                     initargs=(str(cache.root),)) as pool:
                 futures = {
                     pool.submit(_pool_cell, specs[i].to_dict()): i
                     for i in pending
@@ -186,6 +228,9 @@ def run_sweep(
             if first_error is not None:
                 raise first_error
         else:
+            if runner is None:
+                # inline execution compiles in-process; same persistent cache
+                enable_compilation_cache(str(cache.root))
             run_one = runner or run_spec
             for idx in pending:
                 results[idx] = run_one(specs[idx])

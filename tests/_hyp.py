@@ -10,7 +10,7 @@ there.
 
 Only the strategy surface the test files actually use is implemented:
 ``integers``, ``floats``, ``sampled_from``, ``booleans``, ``none``,
-``one_of``.
+``one_of``, ``lists``.
 """
 
 from __future__ import annotations
@@ -57,6 +57,15 @@ except ModuleNotFoundError:
         @staticmethod
         def none():
             return _Strategy(lambda rng: None)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [
+                    elements.draw(rng)
+                    for _ in range(rng.randint(min_size, max_size))
+                ]
+            )
 
         @staticmethod
         def one_of(*strategies):

@@ -1,0 +1,194 @@
+"""Vectorized SecAgg vs the frozen per-leaf loop reference.
+
+The vectorized path (one batched PRG call per round, flat field vectors,
+sign-convention scatter) changes every pad *value* but not a single
+aggregate *bit*: mask cancellation is exact in Z_2^32 either way, so the
+sum of uploads equals the sum of encoded plaintexts exactly in both
+implementations.  These tests pin that contract against the vendored
+pre-refactor loops in ``tests/_legacy_secagg.py``, plus field round-trip
+properties for ``_encode``/``_decode`` and the exact integer sum path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.secagg import (
+    DropoutRobustSession,
+    SecAggConfig,
+    SecAggSession,
+    secure_sum,
+    secure_sum_ints,
+    secure_sum_with_dropouts,
+    _decode,
+    _encode,
+)
+
+from _legacy_secagg import (
+    LegacySecAggSession,
+    legacy_secure_sum,
+    legacy_secure_sum_with_dropouts,
+)
+
+
+def _trees(rng, n, dims=(7, 3)):
+    return [
+        {"w": jnp.asarray(rng.normal(0, 3, dims[0]).astype(np.float32)),
+         "b": {"c": jnp.asarray(rng.normal(0, 1, dims[1]).astype(np.float32))}}
+        for _ in range(n)
+    ]
+
+
+# -- masks cancel + aggregates bit-identical to the legacy loops -------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 6), dim=st.integers(1, 17), seed=st.integers(0, 500))
+def test_vectorized_masks_cancel_exactly(n, dim, seed):
+    cfg = SecAggConfig(n, frac_bits=16, seed=seed)
+    session = SecAggSession(cfg, {"w": jnp.zeros((dim,))})
+    with np.errstate(over="ignore"):
+        total = sum(
+            np.asarray(session.mask_for(i)[0], dtype=np.uint64)
+            for i in range(n)
+        ) % (1 << 32)
+    assert (total == 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 6), seed=st.integers(0, 500))
+def test_secure_sum_bit_identical_to_legacy_loop(n, seed):
+    rng = np.random.default_rng(seed)
+    vals = _trees(rng, n)
+    cfg = SecAggConfig(n, frac_bits=16, seed=seed)
+    new = secure_sum(vals, cfg)
+    old = legacy_secure_sum(vals, cfg)
+    for a, b in zip(jax.tree_util.tree_leaves(new),
+                    jax.tree_util.tree_leaves(old)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_empty_and_scalar_leaves_round_trip():
+    """Zero-size leaves contribute 0 field elements and scalars 1 — the
+    flat vector and the mask rows must agree on both."""
+    tree = {"w": jnp.zeros((0,)), "b": jnp.asarray(1.25),
+            "v": jnp.asarray([0.5, -0.5])}
+    out = secure_sum([tree, tree, tree], SecAggConfig(3, seed=5))
+    assert np.shape(out["w"]) == (0,)
+    np.testing.assert_allclose(float(out["b"]), 3.75, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out["v"]), [1.5, -1.5], atol=1e-4)
+    out2 = secure_sum_with_dropouts(
+        [tree, tree, None], SecAggConfig(3, seed=5), threshold=2
+    )
+    np.testing.assert_allclose(float(out2["b"]), 2.5, atol=1e-4)
+
+
+def test_ciphertexts_differ_but_sums_agree():
+    """The pads changed (one generation per pair, flat derivation) — a
+    sanity check that this test file isn't comparing identical bytes."""
+    cfg = SecAggConfig(3, frac_bits=16, seed=11)
+    tmpl = {"w": jnp.zeros((16,))}
+    x = {"w": jnp.ones((16,))}
+    new_up = SecAggSession(cfg, tmpl).upload(0, x)[0]
+    old_up = LegacySecAggSession(cfg, tmpl).upload(0, x)[0]
+    assert not np.array_equal(new_up, old_up)
+
+
+@pytest.mark.parametrize("dropped", [set(), {2}, {0, 4}, {1, 2}])
+def test_dropout_aggregate_bit_identical_to_legacy_loop(dropped):
+    rng = np.random.default_rng(3)
+    n = 5
+    vals = _trees(rng, n)
+    cfg = SecAggConfig(n, frac_bits=16, seed=7)
+    slots = [None if i in dropped else vals[i] for i in range(n)]
+    new = secure_sum_with_dropouts(slots, cfg, threshold=3)
+    old = legacy_secure_sum_with_dropouts(slots, cfg, threshold=3)
+    for a, b in zip(jax.tree_util.tree_leaves(new),
+                    jax.tree_util.tree_leaves(old)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dropout_recovery_pads_regenerate_from_secret():
+    """Upload-side pads and recovery-side pads must come from the same
+    seed-keyed derivation: with a dropout, the recovered aggregate equals
+    the survivors' plain sum to fixed-point exactness."""
+    rng = np.random.default_rng(4)
+    n = 4
+    vals = _trees(rng, n)
+    cfg = SecAggConfig(n, frac_bits=16, seed=9)
+    session = DropoutRobustSession(cfg, vals[0], threshold=2)
+    uploads = {i: session.upload(i, vals[i]) for i in range(n) if i != 1}
+    out = session.aggregate(uploads)
+    expected = sum(
+        np.concatenate([np.asarray(v["w"]), np.asarray(v["b"]["c"])])
+        for i, v in enumerate(vals) if i != 1
+    )
+    got = np.concatenate([np.asarray(out["w"]), np.asarray(out["b"]["c"])])
+    np.testing.assert_allclose(got, expected, atol=n * 2**-15)
+
+
+# -- field encode/decode round-trips -----------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    x=st.floats(min_value=-30000.0, max_value=30000.0,
+                allow_nan=False, allow_infinity=False),
+    frac_bits=st.integers(0, 20),
+)
+def test_encode_decode_round_trip(x, frac_bits):
+    """decode(encode(x)) is x rounded to the fixed-point grid (exactly),
+    for every value whose quantisation fits the field's signed half."""
+    cfg = SecAggConfig(2, frac_bits=frac_bits)
+    q = np.round(np.float64(np.float32(x)) * cfg.scale)
+    if abs(q) >= 2**31:
+        return  # out of field range: wraps by design
+    got = _decode(_encode(np.float32(x), cfg), cfg)
+    want = np.float32(q / cfg.scale)
+    assert got == want
+
+
+@settings(max_examples=30, deadline=None)
+@given(v=st.integers(0, 2**24), frac_bits=st.integers(0, 6))
+def test_integers_on_the_grid_survive_exactly(v, frac_bits):
+    """Integers round-trip the float fixed-point path exactly only up to
+    float32's 2^24 mantissa limit — the reason ``secure_sum_ints`` exists:
+    the field itself is exact to 2^31, the float decode is not."""
+    cfg = SecAggConfig(2, frac_bits=frac_bits)
+    if v * cfg.scale >= 2**31:  # representable range shrinks with frac bits
+        return
+    assert float(_decode(_encode(float(v), cfg), cfg)) == float(v)
+
+
+def test_float_path_loses_big_integers_but_int_path_does_not():
+    """Above 2^24 the old float round-trip quantises; the integer field
+    sum stays exact — the sum_sizes bugfix, demonstrated."""
+    v = 366_390_673  # < 2^31, not representable in float32
+    cfg = SecAggConfig(2, frac_bits=0)
+    assert float(_decode(_encode(float(v), cfg), cfg)) != float(v)
+    assert secure_sum_ints([v, 17], n_participants=2, seed=0) == v + 17
+
+
+# -- exact integer sums (the sum_sizes bugfix) -------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    sizes=st.lists(st.integers(0, 1 << 27), min_size=1, max_size=12),
+    seed=st.integers(0, 100),
+)
+def test_secure_sum_ints_is_exact(sizes, seed):
+    got = secure_sum_ints(sizes, n_participants=len(sizes), seed=seed)
+    assert got == sum(sizes)
+
+
+def test_secure_sum_ints_validates():
+    with pytest.raises(ValueError, match="participants"):
+        secure_sum_ints([1, 2], n_participants=3)
+    with pytest.raises(ValueError, match="negative"):
+        secure_sum_ints([-1], n_participants=1)
+    with pytest.raises(ValueError, match="overflow"):
+        secure_sum_ints([1 << 31], n_participants=1)
+    assert secure_sum_ints([5], n_participants=1, seed=3) == 5  # no pairs
