@@ -12,19 +12,34 @@ contribution loop (``fused_rounds=False``) and the fused cohort round-step
   * jit program launches per round, from the ``instrumented_jit`` counter in
     ``repro.arms.fused`` — O(H) on the loop path, O(1) on the fused path.
 
+Every non-SecAgg fused cell also runs SPMD on the ``shard`` backend and the
+report gains a ``shard`` column (``shard_vs_ideal`` wall ratio per cell) —
+the trajectory record for carrying the fused path onto the pod fast path.
+Shard cells are measured in a SUBPROCESS that forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for itself: forcing
+host devices in the *parent* would split the XLA CPU thread pool and slow
+every baseline cell, silently breaking the artifact's comparability with
+earlier trajectory points.  On forced host devices the "mesh" shares one
+CPU's cores, so the shard ratio records collective overhead, not a speedup
+claim.
+
 ``python benchmarks/hotpath.py`` writes ``BENCH_hotpath.json`` (the
 committed artifact).  ``--smoke`` runs tiny shapes and *asserts* the fused
-path's dispatch count is O(1) per round — the CI perf-smoke job's contract.
+path's dispatch count is O(1) per round (on every backend measured) — the
+CI perf-smoke job's contract.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 
 import repro.arms as arms
+from repro.arms import backends as backends_lib
 from repro.arms import fused
 from repro.core.dp import DPConfig
 from repro.data.synthetic import make_gemini_like
@@ -52,45 +67,53 @@ def _cfg(rounds: int, use_secagg: bool, fused_rounds: bool) -> arms.ArmConfig:
     )
 
 
-def _run_once(arm: str, model, silos, cfg) -> tuple[float, int, int]:
+def _run_once(arm: str, model, silos, cfg,
+              backend: str = backends_lib.DEFAULT_BACKEND
+              ) -> tuple[float, int, int]:
     """(wall seconds, jit dispatches, rounds completed) for one fresh run."""
     fused.reset_jit_dispatches()
     t0 = time.perf_counter()
-    rep = arms.run(arm, model, silos, cfg)
+    rep = arms.run(arm, model, silos, cfg, backend=backend)
     dt = time.perf_counter() - t0
     return dt, fused.jit_dispatches(), rep.rounds_completed
 
 
 def measure(arm: str, h: int, *, use_secagg: bool, fused_rounds: bool,
-            r_lo: int, r_hi: int, repeats: int) -> dict:
+            r_lo: int, r_hi: int, repeats: int,
+            backend: str = backends_lib.DEFAULT_BACKEND) -> dict:
     """Marginal per-round wall/dispatch cost for one (arm, H, path) cell."""
     model, silos = _make_setup(h)
     # compile warmup: a fresh arm per run re-traces, so prime the XLA-level
     # caches for both round counts before timing
-    _run_once(arm, model, silos, _cfg(2, use_secagg, fused_rounds))
-    walls, disps = [], []
+    _run_once(arm, model, silos, _cfg(2, use_secagg, fused_rounds), backend)
+    t_los, t_his, disps = [], [], []
+    n_lo = n_hi = 0
     for _ in range(repeats):
         t_lo, d_lo, n_lo = _run_once(
-            arm, model, silos, _cfg(r_lo, use_secagg, fused_rounds))
+            arm, model, silos, _cfg(r_lo, use_secagg, fused_rounds), backend)
         t_hi, d_hi, n_hi = _run_once(
-            arm, model, silos, _cfg(r_hi, use_secagg, fused_rounds))
+            arm, model, silos, _cfg(r_hi, use_secagg, fused_rounds), backend)
         if n_hi <= n_lo:
             raise RuntimeError(f"{arm} H={h}: no marginal rounds measured")
-        walls.append((t_hi - t_lo) / (n_hi - n_lo))
+        t_los.append(t_lo)
+        t_his.append(t_hi)
         disps.append((d_hi - d_lo) / (n_hi - n_lo))
-    # interference only ever ADDS time: a stall in the short run drives a
-    # marginal negative, in the long run inflates it.  Drop the impossible
-    # (non-positive) samples and keep the least-interfered one — the
-    # standard min-of-repeats timing estimator, applied to marginals.  If
-    # every repeat was corrupted, record the cell as unmeasured (null)
-    # rather than fabricating a number.
-    positive = sorted(w for w in walls if w > 0)
+    # interference only ever ADDS time, so min-of-repeats per ENDPOINT
+    # converges on each clean total from above; differencing the minima
+    # then cancels compile/setup.  (Differencing per pair and min-ing the
+    # marginals — the earlier estimator — keeps a stall-deflated sample
+    # whenever the short run stalls: observed as impossible sub-dispatch
+    # cells like 27 µs/round on this container.)  A non-positive marginal
+    # means every repeat of one endpoint was corrupted: record the cell as
+    # unmeasured (null) rather than fabricating a number.
+    wall = (min(t_his) - min(t_los)) / (n_hi - n_lo)
     return {
         "arm": arm,
         "hospitals": h,
         "use_secagg": use_secagg,
+        "backend": backend,
         "path": "fused" if fused_rounds else "loop",
-        "wall_per_round_s": positive[0] if positive else None,
+        "wall_per_round_s": wall if wall > 0 else None,
         "dispatches_per_round": min(disps),
     }
 
@@ -102,21 +125,60 @@ CELLS = [  # (arm, use_secagg) — the round arms the fused path covers
     ("fedprox", False),
 ]
 
+_SHARD_DEVICES = 8
+
+
+def _measure_shard_cell(arm: str, h: int, r_lo: int, r_hi: int,
+                        repeats: int) -> dict:
+    """One shard cell, measured in a subprocess that forces its own host
+    devices — the parent process stays unflagged so baseline cells keep
+    the full XLA CPU thread pool (trajectory comparability)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_SHARD_DEVICES}"
+    )
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    spec = json.dumps({"arm": arm, "h": h, "r_lo": r_lo, "r_hi": r_hi,
+                       "repeats": repeats})
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--shard-cell", spec],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"shard cell {arm}/h{h} failed:\n{proc.stderr[-2000:]}"
+        )
+    payload = [ln for ln in proc.stdout.splitlines()
+               if ln.startswith("ROW")][-1]
+    return json.loads(payload[len("ROW"):])
+
 
 def collect(hs: list[int], r_lo: int, r_hi: int, repeats: int,
             progress=lambda msg: None) -> dict:
     rows = []
     for h in hs:
         for arm, secagg in CELLS:
-            for fused_rounds in (False, True):
-                row = measure(arm, h, use_secagg=secagg,
-                              fused_rounds=fused_rounds,
-                              r_lo=r_lo, r_hi=r_hi, repeats=repeats)
+            plans = [(backends_lib.DEFAULT_BACKEND, False),
+                     (backends_lib.DEFAULT_BACKEND, True)]
+            if not secagg:
+                # the SPMD column: fused only (shard has no loop path), and
+                # never under SecAgg (the capabilities rule the pair out)
+                plans.append(("shard", True))
+            for backend, fused_rounds in plans:
+                if backend == "shard":
+                    row = _measure_shard_cell(arm, h, r_lo, r_hi, repeats)
+                else:
+                    row = measure(arm, h, use_secagg=secagg,
+                                  fused_rounds=fused_rounds,
+                                  r_lo=r_lo, r_hi=r_hi, repeats=repeats,
+                                  backend=backend)
                 rows.append(row)
                 wall = row["wall_per_round_s"]
                 progress(
                     f"{arm:8s} H={h:<3d} secagg={str(secagg):5s} "
-                    f"{row['path']:5s} "
+                    f"{backend:5s} {row['path']:5s} "
                     + (f"{wall*1e3:8.2f} ms/round" if wall is not None
                        else "  (unmeasured: interference)")
                     + f" {row['dispatches_per_round']:6.1f} disp/round"
@@ -124,15 +186,19 @@ def collect(hs: list[int], r_lo: int, r_hi: int, repeats: int,
     speedups = {}
     for h in hs:
         for arm, secagg in CELLS:
-            pair = {
-                r["path"]: r for r in rows
+            cell_rows = [
+                r for r in rows
                 if r["arm"] == arm and r["hospitals"] == h
                 and r["use_secagg"] == secagg
-            }
+            ]
+            pair = {r["path"]: r for r in cell_rows
+                    if r["backend"] == backends_lib.DEFAULT_BACKEND}
+            shard = next((r for r in cell_rows if r["backend"] == "shard"),
+                         None)
             key = f"{arm}{'-secagg' if secagg else ''}-h{h}"
             f_wall = pair["fused"]["wall_per_round_s"]
             l_wall = pair["loop"]["wall_per_round_s"]
-            speedups[key] = {
+            entry = {
                 # null when either side went unmeasured — never fabricated
                 "speedup": (l_wall / f_wall
                             if f_wall is not None and l_wall is not None
@@ -140,10 +206,23 @@ def collect(hs: list[int], r_lo: int, r_hi: int, repeats: int,
                 "loop_dispatches": pair["loop"]["dispatches_per_round"],
                 "fused_dispatches": pair["fused"]["dispatches_per_round"],
             }
+            if shard is not None:
+                s_wall = shard["wall_per_round_s"]
+                entry["shard_wall_per_round_s"] = s_wall
+                entry["shard_dispatches"] = shard["dispatches_per_round"]
+                # > 1 means the mesh run pays that factor over single-device
+                # ideal; on forced host devices this records collective
+                # overhead, not a speedup claim
+                entry["shard_vs_ideal"] = (
+                    s_wall / f_wall
+                    if s_wall is not None and f_wall is not None else None
+                )
+            speedups[key] = entry
     return {
         "preset": "small-tabular (gemini/small: 32-feature linear model)",
         "rounds_marginal": [r_lo, r_hi],
         "repeats": repeats,
+        "shard_devices": _SHARD_DEVICES,
         "rows": rows,
         "speedups": speedups,
     }
@@ -157,7 +236,11 @@ def run(fast: bool = True) -> list[dict]:
     return [
         {
             "name": (f"hotpath_{r['arm']}_h{r['hospitals']}"
-                     f"{'_secagg' if r['use_secagg'] else ''}_{r['path']}"),
+                     f"{'_secagg' if r['use_secagg'] else ''}"
+                     + (f"_{r['backend']}"
+                        if r["backend"] != backends_lib.DEFAULT_BACKEND
+                        else "")
+                     + f"_{r['path']}"),
             "us_per_call": (r["wall_per_round_s"] or 0.0) * 1e6,
             "derived": f"dispatches_per_round={r['dispatches_per_round']:.1f}",
         }
@@ -175,7 +258,19 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--rounds", type=int, nargs=2, default=[10, 50],
                    metavar=("R_LO", "R_HI"))
     p.add_argument("--repeats", type=int, default=5)
+    p.add_argument("--shard-cell", help=argparse.SUPPRESS)  # subprocess mode
     args = p.parse_args(argv)
+
+    if args.shard_cell:
+        # child mode: this process was spawned with forced host devices to
+        # measure exactly one shard cell; print the row and exit
+        spec = json.loads(args.shard_cell)
+        row = measure(spec["arm"], spec["h"], use_secagg=False,
+                      fused_rounds=True, r_lo=spec["r_lo"],
+                      r_hi=spec["r_hi"], repeats=spec["repeats"],
+                      backend="shard")
+        print("ROW" + json.dumps(row))
+        return 0
 
     if args.smoke:
         args.hospitals, args.rounds, args.repeats = [4], [2, 6], 1
@@ -187,11 +282,18 @@ def main(argv: list[str] | None = None) -> int:
     failures = []
     for key, s in report["speedups"].items():
         # the structural contract, asserted even in --smoke: a fused round
-        # is ONE cohort program launch, a loop round is >= H of them
+        # is ONE cohort program launch, a loop round is >= H of them —
+        # on the SPMD backend too (the mesh must not reintroduce per-
+        # participant or per-shard dispatch)
         if s["fused_dispatches"] > 2.0:
             failures.append(
                 f"{key}: fused path dispatches "
                 f"{s['fused_dispatches']:.1f}/round (expected O(1))"
+            )
+        if s.get("shard_dispatches", 0.0) > 2.0:
+            failures.append(
+                f"{key}: shard path dispatches "
+                f"{s['shard_dispatches']:.1f}/round (expected O(1))"
             )
         if s["loop_dispatches"] < s["fused_dispatches"]:
             failures.append(f"{key}: loop path dispatched less than fused?")
@@ -202,9 +304,12 @@ def main(argv: list[str] | None = None) -> int:
     for key, s in sorted(report["speedups"].items()):
         sp = (f"{s['speedup']:6.2f}x" if s["speedup"] is not None
               else "   n/a")
-        print(f"{key:24s} speedup {sp}  "
-              f"dispatches {s['loop_dispatches']:.1f} -> "
-              f"{s['fused_dispatches']:.1f}")
+        line = (f"{key:24s} speedup {sp}  "
+                f"dispatches {s['loop_dispatches']:.1f} -> "
+                f"{s['fused_dispatches']:.1f}")
+        if s.get("shard_vs_ideal") is not None:
+            line += f"  shard/ideal {s['shard_vs_ideal']:5.2f}x"
+        print(line)
     if failures:
         print("\n".join("FAIL: " + f for f in failures), file=sys.stderr)
         return 1

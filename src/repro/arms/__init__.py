@@ -1,10 +1,14 @@
 """repro.arms — write each federation arm once, run it on any backend.
 
-The unified Arm/Backend API (DESIGN.md §5): an ``Arm`` declares a protocol's
-per-round numerics (local update, aggregation, accounting, what goes on the
-wire) with no notion of time; the backends execute it either idealized
-(``LocalRunner`` — the paper's utility experiments) or under simulated time
-(``SimRunner`` — wall-clock, bytes-on-wire, stragglers, dropout recovery).
+The unified Arm/Backend API (DESIGN.md §5, §8): an ``Arm`` declares a
+protocol's per-round numerics (local update, aggregation, accounting, what
+goes on the wire) with no notion of time; a registry of *backends*
+(``repro.arms.backends``) executes it — idealized (``LocalRunner`` — the
+paper's utility experiments), under simulated time (``SimRunner`` —
+wall-clock, bytes-on-wire, stragglers, dropout recovery), or SPMD on a
+device mesh (``repro.launch.federated.ShardedRunner``).  Arm/backend pairs
+are capability-negotiated: a combination the ``BackendInfo`` records rule
+out fails loudly at validation time.
 
     import repro.arms as arms
     report = arms.run("decaph", model, silos, arms.ArmConfig(rounds=20))
@@ -36,6 +40,8 @@ from repro.arms.base import (
     tree_bytes,
     tree_sum,
 )
+from repro.arms import backends
+from repro.arms.backends import BackendInfo, RunSetup, register_backend
 from repro.arms.registry import get, names, register
 from repro.arms.results import RoundLog, RunReport, SimTiming
 from repro.arms.runners import LocalRunner, SimRunner, default_topology
@@ -57,35 +63,40 @@ def run(
     participants: Sequence[Participant],
     cfg: ArmConfig,
     *,
-    backend: str = "ideal",
+    backend: str = backends.DEFAULT_BACKEND,
     nodes=None,
     topo=None,
+    mesh=None,
 ) -> RunReport:
     """Instantiate arm ``name`` and execute it on the chosen backend.
 
-    ``backend="ideal"`` ignores ``nodes`` (everyone is infinitely fast);
-    ``backend="sim"`` requires ``nodes`` (one ``HospitalNode`` per
-    participant).  ``topo`` defaults to the arm's natural topology.
+    ``backend`` is any name from ``backends.backend_registry()``; the pair is
+    capability-validated before any compute (an arm/backend/config combination
+    the capabilities rule out fails loudly here, not mid-run).  Each backend
+    consumes the ``RunSetup`` fields it understands — ``nodes`` (one
+    ``HospitalNode`` per participant) for simulated time, ``mesh`` for SPMD —
+    and rejects what it requires but did not get.  ``topo`` defaults to the
+    arm's natural topology.
     """
-    arm = get(name)(model, participants, cfg)
-    if backend == "ideal":
-        return LocalRunner(topo=topo).run(arm)
-    if backend == "sim":
-        if nodes is None:
-            raise ValueError("backend='sim' needs nodes= (HospitalNode list)")
-        if topo is None:
-            topo = default_topology(arm.topology_kind, len(nodes),
-                                    cfg.fl_server)
-        return SimRunner(nodes, topo).run(arm)
-    raise ValueError(f"unknown backend {backend!r}; use 'ideal' or 'sim'")
+    arm_cls = get(name)
+    backend_cls = backends.get_backend(backend)
+    backends.validate_run(arm_cls, backend_cls.info, cfg)
+    runner = backend_cls.from_setup(
+        backends.RunSetup(nodes=nodes, topo=topo, mesh=mesh)
+    )
+    return runner.run(arm_cls(model, participants, cfg))
 
 
 __all__ = [
     "AggregationServices",
     "Arm",
     "ArmConfig",
+    "BackendInfo",
     "Contribution",
     "LocalRunner",
+    "RunSetup",
+    "backends",
+    "register_backend",
     "Model",
     "NodeArm",
     "Participant",

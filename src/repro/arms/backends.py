@@ -1,0 +1,270 @@
+"""Backend registry + capability-negotiated Runner protocol (DESIGN.md §8).
+
+Arms became registry-discovered citizens in PR 2; this module does the same
+for the *other* side of the contract.  A backend is one module that defines a
+class satisfying the ``Runner`` protocol, declares what it can do in a
+``BackendInfo`` capability record, and registers itself::
+
+    @register_backend(BackendInfo(name="ideal", ...))
+    class LocalRunner:
+        @classmethod
+        def from_setup(cls, setup: RunSetup) -> "LocalRunner": ...
+        def run(self, arm: Arm) -> RunReport: ...
+
+Everything that used to hardcode the ``{"ideal", "sim"}`` pair — the
+``repro.run`` CLI, ``ScenarioSpec`` validation, ``SweepGrid`` backend axes,
+the CI smoke matrix, the cross-backend equivalence tests — enumerates
+``backend_registry()`` instead, so adding a backend is one module, exactly
+like adding an arm.
+
+Capability negotiation replaces the old implicit assumptions: a spec (or a
+direct ``repro.arms.run`` call) requesting an arm/backend pair the
+capabilities rule out fails loudly at validation time with the rule that
+rejected it, instead of silently ignoring a knob or crashing mid-run.
+``bit_exact_group`` drives the cross-backend equivalence tests: backends in
+the same group must produce bit-identical trajectories under ideal
+conditions; across groups the tests fall back to a documented tolerance.
+
+This module is stdlib-only at import time (``ScenarioSpec`` validation calls
+into it): backend *implementations* live in jax-heavy modules listed in
+``_BACKEND_MODULES`` and are imported lazily on first registry access —
+the same deferred-import exception ``grid._registered_arms`` already makes
+for the arm registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import TYPE_CHECKING, Any, Callable, Protocol, Sequence, runtime_checkable
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.arms.base import Arm, ArmConfig
+    from repro.arms.results import RunReport
+
+# The default execution substrate everywhere a caller does not choose one.
+DEFAULT_BACKEND = "ideal"
+
+# Importing one of these modules registers its backend(s) — one module per
+# backend, exactly like arm modules under ``repro.arms``.
+_BACKEND_MODULES = (
+    "repro.arms.runners",       # ideal + sim
+    "repro.launch.federated",   # shard (SPMD mesh execution)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendInfo:
+    """What one execution backend can (and cannot) do.
+
+    Attributes:
+      name: registry key (``spec.backend`` / ``--backend`` value).
+      supports_fused: executes arms' cohort-batched ``fused_round`` programs.
+      supports_secagg: runs the SecAgg wire protocol (masked ciphertext
+        uploads).  Backends that keep payloads on device (the SPMD fast
+        path) refuse secure uploads at validation time instead of silently
+        shipping plaintext.
+      supports_sim_time: consumes node traces, topologies and link churn —
+        i.e. produces a ``SimTiming`` systems story.  Specs that pin traces
+        are rejected on backends that would silently ignore them.
+      fused_only: refuses arms without a fused hot path (and refuses
+        ``fused_rounds=False`` configs): the backend has no per-participant
+        loop to fall back to.
+      bit_exact_group: backends sharing a non-empty group value promise
+        bit-identical training trajectories for the same (arm, config)
+        under ideal conditions; equivalence tests pair backends by group.
+        Backends in different groups agree only to a documented tolerance
+        (partitioned reductions re-associate float math).
+      device_requirements: human-readable device needs ("" = none); the
+        machine check lives in the backend's optional ``available()``.
+    """
+
+    name: str
+    supports_fused: bool = True
+    supports_secagg: bool = True
+    supports_sim_time: bool = False
+    fused_only: bool = False
+    bit_exact_group: str = ""
+    device_requirements: str = ""
+    description: str = ""
+
+
+@dataclasses.dataclass
+class RunSetup:
+    """Backend-agnostic execution context handed to ``Runner.from_setup``.
+
+    Every field is optional; each backend consumes what it understands and
+    rejects what it requires but did not get (loudly, at construction).
+    """
+
+    nodes: Sequence[Any] | None = None  # HospitalNode list (sim-time backends)
+    topo: Any | None = None             # Topology override
+    mesh: Any | None = None             # jax Mesh override (SPMD backends)
+
+
+@runtime_checkable
+class Runner(Protocol):
+    """The backend contract: construct from a ``RunSetup``, execute any arm.
+
+    ``info`` is attached by ``register_backend``; ``run`` returns the unified
+    ``RunReport``.  An optional classmethod ``available() -> str | None``
+    reports why the backend cannot run in this process (e.g. too few XLA
+    devices) — ``None`` means ready.
+    """
+
+    info: BackendInfo
+
+    @classmethod
+    def from_setup(cls, setup: RunSetup) -> "Runner": ...  # pragma: no cover
+
+    def run(self, arm: "Arm") -> "RunReport": ...  # pragma: no cover
+
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_backend(info: BackendInfo) -> Callable[[type], type]:
+    """Class decorator: ``@register_backend(BackendInfo(name="shard", ...))``."""
+
+    def deco(cls: type) -> type:
+        if info.name in _REGISTRY:
+            raise ValueError(
+                f"backend {info.name!r} already registered "
+                f"({_REGISTRY[info.name].__qualname__})"
+            )
+        cls.info = info
+        cls.backend = info.name  # the RunReport.backend label
+        _REGISTRY[info.name] = cls
+        return cls
+
+    return deco
+
+
+def _ensure_loaded() -> None:
+    for mod in _BACKEND_MODULES:
+        importlib.import_module(mod)
+
+
+def backend_names() -> tuple[str, ...]:
+    """Registered backend names, sorted for stable CLI/CI enumeration."""
+    _ensure_loaded()
+    return tuple(sorted(_REGISTRY))
+
+
+def backend_registry() -> dict[str, BackendInfo]:
+    """name -> capability record, for every registered backend."""
+    _ensure_loaded()
+    return {name: _REGISTRY[name].info for name in sorted(_REGISTRY)}
+
+
+def get_backend(name: str) -> type:
+    _ensure_loaded()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{', '.join(backend_names())}"
+        ) from None
+
+
+def availability(name: str) -> str | None:
+    """Why backend ``name`` cannot run in this process (None = it can)."""
+    cls = get_backend(name)
+    check = getattr(cls, "available", None)
+    return check() if check is not None else None
+
+
+def bit_exact_groups() -> dict[str, tuple[str, ...]]:
+    """Equivalence classes of backends that promise bit-identical runs."""
+    groups: dict[str, list[str]] = {}
+    for name, info in backend_registry().items():
+        if info.bit_exact_group:
+            groups.setdefault(info.bit_exact_group, []).append(name)
+    return {g: tuple(sorted(ns)) for g, ns in sorted(groups.items())}
+
+
+# -- capability negotiation ---------------------------------------------------
+
+
+def compatibility_error(
+    arm_cls: type,
+    info: BackendInfo,
+    *,
+    use_secagg: bool,
+    fused_rounds: bool = True,
+) -> str | None:
+    """The rule that rejects this (arm, backend, config) — or None if OK."""
+    arm_name = getattr(arm_cls, "name", arm_cls.__name__)
+    if fused_rounds and not info.supports_fused:
+        return (
+            f"backend {info.name!r} cannot execute fused cohort programs; "
+            f"set fused_rounds=False to run it per-participant"
+        )
+    secure = bool(getattr(arm_cls, "secure_uploads", False)) and use_secagg
+    if secure and not info.supports_secagg:
+        return (
+            f"arm {arm_name!r} uploads SecAgg ciphertexts but backend "
+            f"{info.name!r} does not run the SecAgg wire protocol "
+            f"(set use_secagg=False to run it there)"
+        )
+    if info.fused_only:
+        if getattr(arm_cls, "mode", "") != "round" or not getattr(
+            arm_cls, "fused_capable", False
+        ):
+            return (
+                f"backend {info.name!r} only executes fused-capable round "
+                f"arms; arm {arm_name!r} has no fused cohort round-step"
+            )
+        if not fused_rounds:
+            return (
+                f"backend {info.name!r} has no per-participant loop to fall "
+                f"back to; fused_rounds=False is not executable there"
+            )
+    return None
+
+
+def validate_run(arm_cls: type, info: BackendInfo, cfg: "ArmConfig") -> None:
+    """Loud pre-flight check used by ``repro.arms.run`` before any compute."""
+    err = compatibility_error(
+        arm_cls, info, use_secagg=cfg.use_secagg, fused_rounds=cfg.fused_rounds
+    )
+    if err is not None:
+        raise ValueError(err)
+
+
+def validate_scenario(
+    *,
+    arm: str,
+    backend: str,
+    use_secagg: bool,
+    needs_sim_time: bool,
+) -> None:
+    """Capability-gate a ``ScenarioSpec`` at construction time.
+
+    Unknown backends are always an error (the backend axis *is* the
+    registry); an unknown arm is left for the executor to reject so specs
+    can be built before optional arm modules load.
+    """
+    try:
+        info = get_backend(backend).info
+    except KeyError:
+        raise ValueError(
+            f"backend {backend!r} not registered; registered backends: "
+            f"{', '.join(backend_names())}"
+        ) from None
+    if needs_sim_time and not info.supports_sim_time:
+        raise ValueError(
+            f"spec pins node traces / topology / stragglers but backend "
+            f"{backend!r} does not execute simulated time (it would "
+            f"silently ignore them); use a backend with supports_sim_time"
+        )
+    import repro.arms as arms_lib  # deferred: the jax-importing path
+
+    try:
+        arm_cls = arms_lib.get(arm)
+    except KeyError:
+        return  # executor fails loudly on unknown arms (with the arm list)
+    err = compatibility_error(arm_cls, info, use_secagg=use_secagg)
+    if err is not None:
+        raise ValueError(err)

@@ -291,6 +291,9 @@ class RoundArm(Arm):
     requires_dst_online = False   # star hub must survive the whole round
     void_logs = False             # log a NaN round when nothing aggregates
     empty_break = False           # empty cohort ends the run (vs skipping)
+    fused_capable = False         # overrides fused_round (backend capability
+                                  # negotiation: fused-only backends refuse
+                                  # arms without it)
 
     # --- cohort / schedule ---------------------------------------------------
 

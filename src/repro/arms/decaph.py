@@ -42,6 +42,7 @@ class DeCaPHArm(RoundArm):
     secure_uploads = True
     void_logs = True            # an empty Poisson round is logged as NaN
     topology_kind = "full"      # any participant can facilitate
+    fused_capable = True
 
     def __init__(self, model: Model, participants: Sequence[Participant],
                  cfg: ArmConfig) -> None:

@@ -37,6 +37,7 @@ class FLArm(RoundArm):
 
     requires_dst_online = True    # classic single point of failure
     topology_kind = "star"
+    fused_capable = True
 
     def __init__(self, model: Model, participants: Sequence[Participant],
                  cfg: ArmConfig) -> None:

@@ -34,6 +34,7 @@ loop O(H).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Any, Callable, Sequence
@@ -49,6 +50,27 @@ PyTree = Any
 
 _jit_dispatch_count = 0
 
+# Active cohort-program executor (DESIGN.md §8).  ``None`` means plain jit on
+# the default device; an SPMD backend installs a ``launch.federated``
+# MeshExecutor for the duration of each fused round, which re-dispatches the
+# same program onto a device mesh with explicit shardings.
+_EXECUTOR = None
+
+
+@contextlib.contextmanager
+def execution_context(executor):
+    """Route every ``instrumented_jit`` call through ``executor`` while open."""
+    global _EXECUTOR
+    prev, _EXECUTOR = _EXECUTOR, executor
+    try:
+        yield
+    finally:
+        _EXECUTOR = prev
+
+
+def active_executor():
+    return _EXECUTOR
+
 
 def instrumented_jit(fn: Callable, **jit_kwargs) -> Callable:
     """``jax.jit`` that counts program launches (``jit_dispatches()``).
@@ -56,6 +78,10 @@ def instrumented_jit(fn: Callable, **jit_kwargs) -> Callable:
     The count is the benchmark's dispatch metric: eager jnp ops are not
     included, so it measures "how many compiled programs does one round
     launch" — O(H) on the legacy loop, O(1) on the fused path.
+
+    The wrapper carries the raw ``fn`` and its jit kwargs so a mesh
+    executor (``execution_context``) can re-stage the same program with
+    explicit shardings instead of the plain single-device jit.
     """
     compiled = jax.jit(fn, **jit_kwargs)
 
@@ -63,9 +89,13 @@ def instrumented_jit(fn: Callable, **jit_kwargs) -> Callable:
     def wrapper(*args, **kwargs):
         global _jit_dispatch_count
         _jit_dispatch_count += 1
+        if _EXECUTOR is not None:
+            return _EXECUTOR.execute(wrapper, args, kwargs)
         return compiled(*args, **kwargs)
 
     wrapper.jitted = compiled
+    wrapper.fn = fn
+    wrapper.jit_kwargs = dict(jit_kwargs)
     return wrapper
 
 
@@ -130,8 +160,8 @@ def stack_poisson(
     rng: np.random.Generator,
     participants: Sequence[Participant],
     active: Sequence[int],
-    rate: float,
-    pad: int,
+    rate: float | Sequence[float],
+    pad: int | Sequence[int],
     steps: int | None = None,
 ) -> CohortBatch:
     """Stack each active participant's Poisson draw(s) to one static shape.
@@ -142,17 +172,36 @@ def stack_poisson(
     outgrew the configured pad (``poisson_batch`` grows rather than
     truncates), the whole cohort is re-padded to the round's max — masks
     keep the extra rows inert.
+
+    ``rate``/``pad`` may be sequences indexed by *absolute* participant
+    index (ragged local-DP arms like primia: every client has its own
+    sampling rate and pad); each draw then uses its own rate/pad exactly
+    like the per-participant loop, and the stack re-pads every row to the
+    cohort max.  Extra zero rows contribute exactly nothing to masked
+    sums, so padding never changes any number.
+
+    Under an active mesh execution context the cohort pad is rounded up to
+    the mesh's data-axis size (again mask-inert) and the stacked batch
+    arrays are marked for sharding along the example axis.
     """
+    rate_of = (rate.__getitem__ if not isinstance(rate, (int, float))
+               else lambda i: rate)
+    pad_of = (pad.__getitem__ if not isinstance(pad, int)
+              else lambda i: pad)
+    executor = _EXECUTOR
     k_steps = 1 if steps is None else steps
     draws: list[list[tuple[dict, np.ndarray, int]]] = []
-    pad_to = pad
+    pad_to = max(pad_of(i) for i in active)
     for i in active:
         row = []
         for _ in range(k_steps):
-            b, m, k = poisson_batch(rng, participants[i], rate, pad)
+            b, m, k = poisson_batch(rng, participants[i], rate_of(i),
+                                    pad_of(i))
             pad_to = max(pad_to, len(m))
             row.append((b, m, k))
         draws.append(row)
+    if executor is not None:
+        pad_to = executor.round_pad(pad_to)
 
     def gather(fn):
         return np.stack([
@@ -168,6 +217,10 @@ def stack_poisson(
     sizes = [int(c) for c in counts.sum(axis=1)]
     if steps is None:  # collapse the singleton steps axis
         x, y, masks, counts = x[:, 0], y[:, 0], masks[:, 0], counts[:, 0]
+    if executor is not None:
+        example_axis = 1 if steps is None else 2
+        for arr in (x, y, masks):
+            executor.mark(arr, axis=example_axis)
     return CohortBatch(x=x, y=y, masks=masks, counts=counts, sizes=sizes)
 
 

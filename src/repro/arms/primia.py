@@ -12,6 +12,7 @@ from __future__ import annotations
 from typing import Mapping, Sequence
 
 import jax
+import numpy as np
 
 from repro.arms.base import (
     AggregationServices,
@@ -41,6 +42,7 @@ class PriMIAArm(RoundArm):
     requires_dst_online = True
     empty_break = True            # every budget exhausted -> run over
     topology_kind = "star"
+    fused_capable = True
 
     def __init__(self, model: Model, participants: Sequence[Participant],
                  cfg: ArmConfig) -> None:
@@ -81,6 +83,41 @@ class PriMIAArm(RoundArm):
             )
         )
 
+        def cohort_step(params, bx, by, masks, counts, salt_t, idxs):
+            """Every client's locally-noised mean gradient + the cohort
+            total in one program.  The ragged per-client Poisson draws ride
+            the cohort pad (padded to the round max; masks keep the extra
+            rows inert), noise keys fold in ``(salt_t, idx)`` exactly like
+            the per-participant path, and each client divides by its own
+            real-example count."""
+
+            def one(bx_i, by_i, m_i, k_i, idx):
+                g_sum, loss = dp_lib.per_example_clipped_grad_sum(
+                    model.loss_fn, params, {"x": bx_i, "y": by_i},
+                    clip_norm=cfg.dp.clip_norm,
+                    microbatch_size=cfg.dp.microbatch_size,
+                    mask=m_i,
+                )
+                nkey = jax.random.fold_in(
+                    jax.random.fold_in(self._key, salt_t), idx
+                )
+                # Local DP: the FULL noise per client (n_shares=1).
+                g = dp_lib.tree_add_noise(
+                    g_sum, nkey, clip_norm=cfg.dp.clip_norm,
+                    noise_multiplier=cfg.dp.noise_multiplier, n_shares=1,
+                )
+                g = jax.tree_util.tree_map(
+                    lambda x: x / jax.numpy.maximum(k_i, 1), g
+                )
+                return g, loss
+
+            stack, losses = jax.vmap(one)(bx, by, masks, counts, idxs)
+            return stack, fused.seq_tree_sum(stack, bx.shape[0]), losses
+
+        self._fused_step, self._fused_step_slim = fused.instrumented_jit_pair(
+            cohort_step
+        )
+
     def quorum(self) -> tuple[int, int | None]:
         return 1, self.cfg.fl_server
 
@@ -106,6 +143,26 @@ class PriMIAArm(RoundArm):
         g = tree_div(g, max(k, 1))
         self.accts[i].step()  # privacy is spent at compute time, not arrival
         return Contribution(payload=g, size=k, loss=float(loss))
+
+    def fused_round(self, params, active, t, rng, n_shares, need_payloads,
+                    need_reduced=True):
+        # per-client rates *and* pads: the stack draws each client with its
+        # own (rate, pad) in loop order, then re-pads to the cohort max
+        cb = fused.stack_poisson(
+            rng, self.participants, active, self.rates, self.pads
+        )
+        args = (params, cb.x, cb.y, cb.masks, cb.counts,
+                np.int32(_NOISE_SALT + t), np.asarray(active, np.int32))
+        if need_reduced:
+            stack, reduced, losses = self._fused_step(*args)
+        else:
+            (stack, losses), reduced = self._fused_step_slim(*args), None
+        for i in active:
+            self.accts[i].step()  # spent at compute time, like the loop path
+        contribs = fused.build_contributions(
+            active, stack, losses, cb.sizes, need_payloads
+        )
+        return contribs, reduced
 
     def aggregate(
         self,

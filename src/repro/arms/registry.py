@@ -2,9 +2,10 @@
 
 ``register`` is used as a class decorator on ``Arm`` subclasses; ``get``
 returns the class so callers instantiate it with their (model, participants,
-config).  Both execution backends (``LocalRunner``, ``SimRunner``) consume
-the same registered class — registering an arm is all it takes to get it on
-both backends, the CLI (``python -m repro.run``), and the CI smoke matrix.
+config).  Every registered execution backend (``repro.arms.backends``)
+consumes the same registered class — registering an arm is all it takes to
+get it on every backend its capabilities allow, the CLI
+(``python -m repro.run``), and the CI smoke matrix.
 """
 
 from __future__ import annotations

@@ -1,4 +1,8 @@
-"""The two execution backends that consume registered arms.
+"""The two host execution backends that consume registered arms.
+
+Both register themselves with the backend registry (``repro.arms.backends``,
+DESIGN.md §8); the SPMD ``shard`` backend lives in ``launch/federated.py``
+and subclasses ``LocalRunner``'s round loop.
 
 ``LocalRunner`` is the idealized lockstep executor (every hospital
 infinitely fast and always online, free communication) — it reproduces the
@@ -25,6 +29,7 @@ from typing import Any, Mapping, Sequence
 import jax
 import numpy as np
 
+from repro.arms.backends import BackendInfo, RunSetup, register_backend
 from repro.arms.base import (
     AggregationServices,
     Arm,
@@ -136,13 +141,24 @@ class _SimServices(AggregationServices):
 # -- idealized backend -------------------------------------------------------
 
 
+@register_backend(BackendInfo(
+    name="ideal",
+    supports_fused=True,
+    supports_secagg=True,
+    supports_sim_time=False,
+    bit_exact_group="host",
+    description="idealized lockstep: every hospital infinitely fast and "
+                "always online, communication free",
+))
 class LocalRunner:
     """Idealized lockstep execution of any registered arm."""
 
-    backend = "ideal"
-
     def __init__(self, topo: Topology | None = None) -> None:
         self.topo = topo  # only node arms (gossip) consult it
+
+    @classmethod
+    def from_setup(cls, setup: RunSetup) -> "LocalRunner":
+        return cls(topo=setup.topo)
 
     def run(self, arm: Arm) -> RunReport:
         if isinstance(arm, RoundArm):
@@ -150,6 +166,14 @@ class LocalRunner:
         if isinstance(arm, NodeArm):
             return self._run_nodes(arm)
         raise TypeError(f"unknown arm mode {arm.mode!r} for {arm.name!r}")
+
+    def _fused_round(self, arm: RoundArm, params, active, t, rng, *,
+                     need_payloads: bool, need_reduced: bool):
+        """The per-round fused-program seam: SPMD backends override this to
+        run the same call under a mesh execution context."""
+        return arm.fused_round(params, active, t, rng, len(active),
+                               need_payloads=need_payloads,
+                               need_reduced=need_reduced)
 
     def _run_rounds(self, arm: RoundArm) -> RunReport:
         cfg, h = arm.cfg, arm.h
@@ -167,9 +191,9 @@ class LocalRunner:
             if cfg.fused_rounds:
                 # one dispatch for the whole cohort; with SecAgg off the
                 # reduced aggregate never leaves the device either
-                fr = arm.fused_round(params, active, t, rng, len(active),
-                                     need_payloads=secure,
-                                     need_reduced=not secure)
+                fr = self._fused_round(arm, params, active, t, rng,
+                                       need_payloads=secure,
+                                       need_reduced=not secure)
                 if fr is not None:
                     contribs, reduced = fr
             if contribs is None:
@@ -261,14 +285,33 @@ def _average_pair(per_node: list[PyTree], i: int, j: int) -> None:
 _tag_counter = itertools.count()
 
 
+@register_backend(BackendInfo(
+    name="sim",
+    supports_fused=True,
+    supports_secagg=True,
+    supports_sim_time=True,
+    bit_exact_group="host",
+    description="discrete-event engine: simulated wall-clock, bytes-on-wire, "
+                "stragglers, dropouts, SecAgg mask recovery",
+))
 class SimRunner:
     """Discrete-event execution of any registered arm (PR-1 engine)."""
 
-    backend = "sim"
-
-    def __init__(self, nodes: Sequence[HospitalNode], topo: Topology) -> None:
+    def __init__(self, nodes: Sequence[HospitalNode],
+                 topo: Topology | None = None) -> None:
         self.nodes = list(nodes)
-        self.topo = topo
+        self.topo = topo  # None -> the arm's natural topology, resolved in run
+        # re-resolve per run: a reused runner must not pin the FIRST arm's
+        # natural topology onto a second arm with a different topology_kind
+        self._auto_topo = topo is None
+
+    @classmethod
+    def from_setup(cls, setup: RunSetup) -> "SimRunner":
+        if setup.nodes is None:
+            raise ValueError(
+                "backend 'sim' needs nodes= (HospitalNode list)"
+            )
+        return cls(setup.nodes, setup.topo)
 
     def _pop(self, engine: EventEngine):
         """Pop the next event, folding scheduled link churn into the topology
@@ -281,6 +324,9 @@ class SimRunner:
     def run(self, arm: Arm) -> RunReport:
         if len(self.nodes) != arm.h:
             raise ValueError("one HospitalNode per participant required")
+        if self._auto_topo:
+            self.topo = default_topology(arm.topology_kind, len(self.nodes),
+                                         arm.cfg.fl_server)
         self.topo.advance_to(0.0)  # fold in any t=0 schedule entries
         if isinstance(arm, RoundArm):
             return self._run_rounds(arm)
@@ -495,12 +541,16 @@ class SimRunner:
                 wire += secagg_recovery_bytes(n_active)["setup_bytes"]
                 slot_of = {i: s for s, i in enumerate(active)}
 
+            ciphers = None
+            if session is not None:
+                # one host transfer + one masking pass for the whole cohort
+                # (each participant still *ships* its own ciphertext below)
+                ciphers = session.upload_all(
+                    {slot_of[i]: c.payload for i, c in contribs.items()}
+                )
             work = {}
             for i, c in contribs.items():
-                payload = (
-                    session.upload(slot_of[i], c.payload) if session
-                    else c.payload
-                )
+                payload = ciphers[slot_of[i]] if ciphers else c.payload
                 work[i] = (payload, nodes[i].compute_time(c.size), model_bytes)
             delivered, dropped_mid, w, d = self._gather_round(
                 engine, dst, work

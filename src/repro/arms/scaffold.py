@@ -52,6 +52,7 @@ class ScaffoldArm(RoundArm):
 
     requires_dst_online = True    # classic single point of failure
     topology_kind = "star"
+    fused_capable = True
 
     def __init__(self, model: Model, participants: Sequence[Participant],
                  cfg: ArmConfig) -> None:

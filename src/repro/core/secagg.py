@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Sequence
+from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -54,11 +54,18 @@ _FIELD_BITS = 32
 # 64->32-bit modular arithmetic regardless of jax_enable_x64.
 
 
+# Pairs per chunk of the in-jit mask accumulation: bounds resident pad
+# memory at ``pad_chunk_pairs * L * 4`` bytes instead of the full
+# O(H^2 * L) pad matrix (~5 GB at H=50 on a 1M-param model).
+_DEFAULT_PAD_CHUNK = 1024
+
+
 @dataclasses.dataclass(frozen=True)
 class SecAggConfig:
     n_participants: int
     frac_bits: int = 16  # fixed-point fractional bits
     seed: int = 0
+    pad_chunk_pairs: int = _DEFAULT_PAD_CHUNK  # memory knob, never numerics
 
     @property
     def scale(self) -> float:
@@ -78,19 +85,22 @@ def _decode(v: np.ndarray, cfg: SecAggConfig) -> np.ndarray:
     return (v.astype(np.float64) / cfg.scale).astype(np.float32)
 
 
-# -- vectorized pair-pad machinery (DESIGN.md §7) ----------------------------
+# -- vectorized, chunked pair-pad machinery (DESIGN.md §7) -------------------
 #
 # Mask generation is the round's O(H^2 * leaves) hot spot when done naively:
 # every (participant, peer, leaf) triple used to be its own fold_in + PRG
 # dispatch, and each unordered pair's pad was generated twice (once with
 # ``+`` by the lower index, once with ``-`` by the higher).  The vectorized
 # path generates the pad of every unordered pair {lo, hi} exactly ONCE per
-# round as a single batched PRG call over the flattened field vector, then
-# applies the sign convention (lo adds, hi subtracts — so every pad appears
-# exactly once with each sign and cancels in the field sum) with stacked
-# scatter-adds.  The legacy per-leaf loop survives as a reference
-# implementation in ``tests/_legacy_secagg.py``; aggregates are bit-identical
-# because mask cancellation is exact either way.
+# round, and — rather than materialising the O(H^2 * L) pad matrix (~5 GB at
+# H=50 on a 1M-param model) — accumulates the signed net-mask rows in-jit
+# over chunks of ``pad_chunk_pairs`` pairs: each chunk's pads are generated
+# by one batched PRG call, scatter-added with the sign convention (lo adds,
+# hi subtracts — every pad appears exactly once with each sign and cancels
+# in the field sum), and freed before the next chunk.  Field addition in
+# Z_2^32 is exactly associative/commutative, so chunking changes no bit;
+# the legacy per-leaf loop survives as a reference implementation in
+# ``tests/_legacy_secagg.py`` and aggregates stay bit-identical to it.
 
 
 def _pairs(n: int) -> tuple[np.ndarray, np.ndarray]:
@@ -99,35 +109,112 @@ def _pairs(n: int) -> tuple[np.ndarray, np.ndarray]:
     return lo.astype(np.uint32), hi.astype(np.uint32)
 
 
-@partial(jax.jit, static_argnums=(3,))
-def _batched_pair_pads(
-    base_key: jax.Array, los: jax.Array, his: jax.Array, length: int
+@partial(jax.jit, static_argnums=(4, 5))
+def _pair_mask_scan(
+    base_key: jax.Array, los: jax.Array, his: jax.Array, valid: jax.Array,
+    n: int, length: int,
 ) -> jax.Array:
-    """(n_pairs, length) uniform field elements — one dispatch per round."""
+    """(n, L) signed net masks from (n_chunks, C) pair-index chunks."""
 
-    def one(lo, hi):
-        k = jax.random.fold_in(jax.random.fold_in(base_key, lo), hi)
-        return jax.random.bits(k, (length,), dtype=jnp.uint32)
+    def body(masks, inp):
+        lo_c, hi_c, v_c = inp
 
-    return jax.vmap(one)(los, his)
+        def one(lo, hi):
+            k = jax.random.fold_in(jax.random.fold_in(base_key, lo), hi)
+            return jax.random.bits(k, (length,), dtype=jnp.uint32)
+
+        pads = jax.vmap(one)(lo_c, hi_c) * v_c[:, None]  # pad rows -> 0
+        masks = masks.at[lo_c].add(pads)
+        masks = masks.at[hi_c].add(-pads)  # uint32: exact two's complement
+        return masks, None
+
+    masks0 = jnp.zeros((n, length), jnp.uint32)
+    masks, _ = jax.lax.scan(body, masks0, (los, his, valid))
+    return masks
 
 
 _SEED_PAD_KEY = jax.random.key(0x5ECA66)
 
 
-@partial(jax.jit, static_argnums=(2,))
-def _batched_seed_pads(
-    hi_words: jax.Array, lo_words: jax.Array, length: int
+def _seed_pad_row(hi, lo, length: int):
+    """One pad row from a DH agreement split into 32-bit words.
+
+    This is THE derivation: the masking scan and the dropout-recovery path
+    must produce bit-identical pads from the same seed words, or survivors'
+    regenerated pads no longer cancel a dropped party's masks — so both go
+    through this one function.
+    """
+    k = jax.random.fold_in(jax.random.fold_in(_SEED_PAD_KEY, hi), lo)
+    return jax.random.bits(k, (length,), dtype=jnp.uint32)
+
+
+@partial(jax.jit, static_argnums=(5, 6))
+def _seed_mask_scan(
+    hi_words: jax.Array, lo_words: jax.Array,
+    los: jax.Array, his: jax.Array, valid: jax.Array,
+    n: int, length: int,
 ) -> jax.Array:
-    """(n_seeds, length) pads from 61-bit DH agreements split into 32-bit
-    words (the seed, not the pair indices, keys the PRG — so a pad can be
-    regenerated from a Shamir-reconstructed secret during recovery)."""
+    """(n, L) signed net masks from chunked DH-seed words (the seed, not
+    the pair indices, keys the PRG — so a pad can be regenerated from a
+    Shamir-reconstructed secret during recovery)."""
 
-    def one(hi, lo):
-        k = jax.random.fold_in(jax.random.fold_in(_SEED_PAD_KEY, hi), lo)
-        return jax.random.bits(k, (length,), dtype=jnp.uint32)
+    def body(masks, inp):
+        hw_c, lw_c, lo_c, hi_c, v_c = inp
+        pads = jax.vmap(
+            lambda hi, lo: _seed_pad_row(hi, lo, length)
+        )(hw_c, lw_c) * v_c[:, None]
+        masks = masks.at[lo_c].add(pads)
+        masks = masks.at[hi_c].add(-pads)
+        return masks, None
 
-    return jax.vmap(one)(hi_words, lo_words)
+    masks0 = jnp.zeros((n, length), jnp.uint32)
+    masks, _ = jax.lax.scan(
+        body, masks0, (hi_words, lo_words, los, his, valid)
+    )
+    return masks
+
+
+def _chunked(arrs: Sequence[np.ndarray], chunk: int) -> list[np.ndarray]:
+    """Zero-pad each 1-D array to a chunk multiple and reshape to chunks,
+    plus a trailing validity row-mask for the padding."""
+    n_items = len(arrs[0])
+    c = max(1, min(int(chunk), n_items))
+    n_chunks = -(-n_items // c)
+    pad = n_chunks * c - n_items
+
+    def shape(a):
+        return np.concatenate(
+            [a, np.zeros((pad,), a.dtype)]
+        ).reshape(n_chunks, c)
+
+    valid = shape(np.ones((n_items,), np.uint32))
+    return [shape(a) for a in arrs] + [valid]
+
+
+def _signed_masks(
+    n: int,
+    length: int,
+    los: np.ndarray,
+    his: np.ndarray,
+    *,
+    chunk: int = _DEFAULT_PAD_CHUNK,
+    base_key: jax.Array | None = None,
+    seeds: Sequence[int] | None = None,
+) -> np.ndarray:
+    """(n, L) net masks: row i = sum_{i=lo} pad - sum_{i=hi} pad (mod 2^32),
+    accumulated in-jit over ``chunk``-pair slices; exactly one of
+    ``base_key`` (pair-index keyed pads) / ``seeds`` (DH-agreement keyed
+    pads) selects the PRG family."""
+    if len(los) == 0:
+        return np.zeros((n, length), _FIELD_DTYPE)
+    if seeds is not None:
+        hi_w, lo_w = _seed_words(seeds)
+        hw, lw, lo_c, hi_c, valid = _chunked([hi_w, lo_w, los, his], chunk)
+        out = _seed_mask_scan(hw, lw, lo_c, hi_c, valid, n, length)
+    else:
+        lo_c, hi_c, valid = _chunked([los, his], chunk)
+        out = _pair_mask_scan(base_key, lo_c, hi_c, valid, n, length)
+    return np.asarray(out)
 
 
 def _seed_words(seeds: Sequence[int]) -> tuple[np.ndarray, np.ndarray]:
@@ -137,15 +224,17 @@ def _seed_words(seeds: Sequence[int]) -> tuple[np.ndarray, np.ndarray]:
     return hi, lo
 
 
-def _signed_mask_rows(
-    pads: np.ndarray, los: np.ndarray, his: np.ndarray, n: int
-) -> np.ndarray:
-    """(n, L) net masks: row i = sum_{i=lo} pad - sum_{i=hi} pad (mod 2^32)."""
-    masks = np.zeros((n, pads.shape[1]), _FIELD_DTYPE)
-    with np.errstate(over="ignore"):  # modular field arithmetic
-        np.add.at(masks, los.astype(np.intp), pads)
-        np.subtract.at(masks, his.astype(np.intp), pads)
-    return masks
+@partial(jax.jit, static_argnums=(2,))
+def _batched_seed_pads(
+    hi_words: jax.Array, lo_words: jax.Array, length: int
+) -> jax.Array:
+    """(n_seeds, length) pads from DH-seed words — the *recovery* path,
+    where the handful of survivor-side pads of a dropped party really is
+    needed as a matrix (to cancel them from the ciphertext sum).  Same
+    ``_seed_pad_row`` derivation as the masking scan, by construction."""
+    return jax.vmap(
+        lambda hi, lo: _seed_pad_row(hi, lo, length)
+    )(hi_words, lo_words)
 
 
 def _flatten_encoded(
@@ -159,6 +248,26 @@ def _flatten_encoded(
             raise ValueError(f"leaf {li} shape {np.shape(x)} != {shape}")
         out.append(_encode(x, cfg).ravel())
     return np.concatenate(out) if out else np.zeros((0,), _FIELD_DTYPE)
+
+
+def _encode_cohort(
+    trees: Sequence[PyTree], template: Sequence[Any], cfg: SecAggConfig
+) -> np.ndarray:
+    """(n, L) encoded field matrix for a whole cohort of payload trees.
+
+    ONE ``jax.device_get`` moves every participant's (possibly
+    device-resident) payload leaves to the host together, instead of the
+    per-silo implicit transfers the per-upload ``np.asarray`` path paid;
+    the fixed-point encode is elementwise, so batching changes no bit.
+    """
+    cohort_leaves = [jax.tree_util.tree_leaves(v) for v in trees]
+    for leaves in cohort_leaves:
+        if len(leaves) != len(template):
+            raise ValueError("pytree structure mismatch")
+    cohort_leaves = jax.device_get(cohort_leaves)
+    return np.stack([
+        _flatten_encoded(leaves, template, cfg) for leaves in cohort_leaves
+    ]) if cohort_leaves else np.zeros((0, 0), _FIELD_DTYPE)
 
 
 def _split_flat(flat: np.ndarray, template: Sequence[Any]) -> list[np.ndarray]:
@@ -184,6 +293,26 @@ def _stack_ciphertexts(
     ])
 
 
+def _masked_cohort_uploads(
+    session, values: Mapping[int, PyTree]
+) -> dict[int, list[np.ndarray]]:
+    """Shared ``upload_all`` body: one batched host transfer for the whole
+    cohort's payloads + one vectorized masking pass.  Bit-identical to
+    per-participant ``upload`` calls (encode is elementwise, masks are the
+    same rows)."""
+    if not values:
+        return {}
+    order = sorted(values)
+    enc = _encode_cohort(
+        [values[i] for i in order], session._leaves, session.cfg
+    )
+    with np.errstate(over="ignore"):  # modular field arithmetic
+        enc = enc + session._flat_masks()[np.asarray(order, np.intp)]
+    return {
+        i: _split_flat(row, session._leaves) for i, row in zip(order, enc)
+    }
+
+
 class SecAggSession:
     """One aggregation round over a fixed pytree template."""
 
@@ -199,16 +328,12 @@ class SecAggSession:
         self._masks: np.ndarray | None = None  # (n, L), built lazily
 
     def _flat_masks(self) -> np.ndarray:
-        """Every participant's net mask, from one batched PRG call."""
+        """Every participant's net mask, accumulated over pair chunks."""
         if self._masks is None:
-            if len(self._los):
-                pads = np.asarray(_batched_pair_pads(
-                    self._base_key, self._los, self._his, self._length
-                ))
-            else:  # single participant: nothing to mask against
-                pads = np.zeros((0, self._length), _FIELD_DTYPE)
-            self._masks = _signed_mask_rows(
-                pads, self._los, self._his, self.cfg.n_participants
+            self._masks = _signed_masks(
+                self.cfg.n_participants, self._length,
+                self._los, self._his,
+                chunk=self.cfg.pad_chunk_pairs, base_key=self._base_key,
             )
         return self._masks
 
@@ -225,6 +350,13 @@ class SecAggSession:
             flat = _flatten_encoded(leaves, self._leaves, self.cfg)
             flat = flat + self._flat_masks()[i]
         return _split_flat(flat, self._leaves)
+
+    def upload_all(
+        self, values: Mapping[int, PyTree]
+    ) -> dict[int, list[np.ndarray]]:
+        """Ciphertexts for a whole cohort: one host transfer, one masking
+        pass (participant index -> masked ciphertext)."""
+        return _masked_cohort_uploads(self, values)
 
     def aggregate(self, uploads: Sequence[list[np.ndarray]]) -> PyTree:
         """Leader-side sum of ciphertexts; masks cancel exactly in Z_2^32."""
@@ -277,8 +409,8 @@ def secure_sum(values: Sequence[PyTree], cfg: SecAggConfig) -> PyTree:
             "contribute (dropouts need DropoutRobustSession)"
         )
     session = SecAggSession(cfg, values[0])
-    uploads = [session.upload(i, v) for i, v in enumerate(values)]
-    return session.aggregate(uploads)
+    uploads = session.upload_all(dict(enumerate(values)))
+    return session.aggregate([uploads[i] for i in range(len(values))])
 
 
 def secure_sum_ints(values: Sequence[int], *, n_participants: int,
@@ -304,11 +436,8 @@ def secure_sum_ints(values: Sequence[int], *, n_participants: int,
         raise ValueError("secure_sum_ints: total overflows the field")
     base_key = jax.random.key(seed)
     los, his = _pairs(n_participants)
-    if len(los):
-        pads = np.asarray(_batched_pair_pads(base_key, los, his, 1))
-    else:
-        pads = np.zeros((0, 1), _FIELD_DTYPE)
-    masks = _signed_mask_rows(pads, los, his, n_participants)[:, 0]
+    masks = _signed_masks(n_participants, 1, los, his,
+                          base_key=base_key)[:, 0]
     with np.errstate(over="ignore"):  # modular field arithmetic
         ciphertexts = np.asarray(values, np.uint64).astype(_FIELD_DTYPE) + masks
         total = int(ciphertexts.sum(dtype=_FIELD_DTYPE))
@@ -441,15 +570,17 @@ class DropoutRobustSession:
         return np.asarray(_batched_seed_pads(hi, lo, self._length))
 
     def _flat_masks(self) -> np.ndarray:
-        """Every participant's net mask; each pair's pad generated once."""
+        """Every participant's net mask; each pair's pad generated once,
+        accumulated over pair chunks (never the full pad matrix)."""
         if self._masks is None:
             seeds = [
                 self._pair_seed(int(lo), int(hi))
                 for lo, hi in zip(self._los, self._his)
             ]
-            pads = self._pads_from_seeds(seeds)
-            self._masks = _signed_mask_rows(
-                pads, self._los, self._his, self.cfg.n_participants
+            self._masks = _signed_masks(
+                self.cfg.n_participants, self._length,
+                self._los, self._his,
+                chunk=self.cfg.pad_chunk_pairs, seeds=seeds,
             )
         return self._masks
 
@@ -462,6 +593,13 @@ class DropoutRobustSession:
             flat = _flatten_encoded(leaves, self._leaves, self.cfg)
             flat = flat + self._flat_masks()[i]
         return _split_flat(flat, self._leaves)
+
+    def upload_all(
+        self, values: Mapping[int, PyTree]
+    ) -> dict[int, list[np.ndarray]]:
+        """Ciphertexts for a whole cohort: one host transfer, one masking
+        pass (slot index -> masked ciphertext)."""
+        return _masked_cohort_uploads(self, values)
 
     # -- recovery -----------------------------------------------------------
 
@@ -533,9 +671,9 @@ def secure_sum_with_dropouts(
     if template is None:
         raise ValueError("every participant dropped; nothing to aggregate")
     session = DropoutRobustSession(cfg, template, threshold=threshold)
-    uploads = {
-        i: session.upload(i, v) for i, v in enumerate(values) if v is not None
-    }
+    uploads = session.upload_all(
+        {i: v for i, v in enumerate(values) if v is not None}
+    )
     return session.aggregate(uploads)
 
 

@@ -1,0 +1,183 @@
+"""The ``shard`` backend: SPMD execution of the fused cohort round-step.
+
+This is the registry module that carries the fused hot path (DESIGN.md §7)
+into the SPMD world of ``launch/``: ``ShardedRunner`` builds a 1-D ``data``
+mesh via ``launch.mesh.make_host_data_mesh``, then executes every fused
+cohort program — the exact same traced function the idealized backend jits —
+under GSPMD with explicit placements:
+
+  * the stacked cohort batches (``fused.stack_poisson`` output) are sharded
+    along the *example* axis over the mesh's data axes — the cohort pad is
+    rounded up to the data-axis size first, which is free because masks keep
+    pad rows exactly inert;
+  * params (and every other operand: noise salts, cohort index vectors,
+    control-variate stacks) are replicated, matching the
+    ``launch/sharding.py`` fallback rule for non-divisible leaves;
+  * outputs get explicit replicated out-shardings: the per-participant
+    payload stacks and the in-jit reduced aggregate come back whole, so the
+    arm's eager aggregation math is identical to the idealized backend's.
+
+The gradient reductions over the sharded example axis lower to all-reduces
+over ``data`` — exactly the collective DeCaPH's secure sum maps onto in the
+production mesh story (DESIGN.md §3).  Partitioned reductions re-associate
+float math, so ``shard`` sits in its own ``bit_exact_group`` ("spmd"):
+against the host backends it agrees to the fused-vs-loop tolerance class
+(atol 1e-5 on the tabular presets; see ``tests/test_backends.py``), not bit
+for bit.
+
+Capability record: fused-only (there is no per-participant loop to fall
+back to) and no SecAgg (the point of the fast path is that payloads never
+leave the device; a spec asking for ciphertext uploads here fails at
+validation time instead of silently shipping plaintext).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.arms import fused
+from repro.arms.backends import (
+    BackendInfo,
+    RunSetup,
+    compatibility_error,
+    register_backend,
+)
+from repro.arms.runners import LocalRunner
+from repro.launch.mesh import data_axes, make_host_data_mesh
+
+_DEVICE_HINT = (
+    "needs >= 2 XLA devices; on CPU launch with "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8"
+)
+
+
+class MeshExecutor:
+    """Re-dispatches ``instrumented_jit`` cohort programs onto a mesh.
+
+    Installed around each fused round via ``fused.execution_context``; the
+    wrapper hands over ``(raw fn, jit kwargs, args)`` and this executor
+    places the operands (example axis sharded for arrays marked by
+    ``stack_poisson``, everything else replicated), stages the program once
+    per wrapper with explicit replicated out-shardings, and launches it.
+    Python-int operands (static argnums) pass through untouched.
+    """
+
+    def __init__(self, mesh) -> None:
+        self.mesh = mesh
+        axes = data_axes(mesh)
+        self._axis_entry = axes if len(axes) > 1 else axes[0]
+        self.data_size = int(np.prod([mesh.shape[a] for a in axes]))
+        self._replicated = NamedSharding(mesh, P())
+        self._marks: dict[int, tuple[np.ndarray, NamedSharding]] = {}
+        self._staged: dict[Any, Any] = {}
+        self.sharded_puts = 0  # placements that actually split an axis
+
+    # -- hooks consumed by repro.arms.fused -----------------------------------
+
+    def round_pad(self, pad: int) -> int:
+        """Round a cohort pad up to a multiple of the data-axis size."""
+        return -(-pad // self.data_size) * self.data_size
+
+    def mark(self, arr: np.ndarray, axis: int) -> None:
+        """Declare ``arr`` a cohort batch to shard along ``axis``."""
+        if arr.shape[axis] % self.data_size:
+            return  # replication fallback (same rule as launch/sharding.py)
+        spec = P(*[self._axis_entry if d == axis else None
+                   for d in range(arr.ndim)])
+        self._marks[id(arr)] = (arr, NamedSharding(self.mesh, spec))
+
+    def begin_round(self) -> None:
+        self._marks.clear()
+
+    def execute(self, wrapper, args, kwargs):
+        staged = self._staged.get(wrapper)
+        if staged is None:
+            # donation is dropped: donated buffers cannot be re-placed with
+            # device_put round after round, and the state stacks involved
+            # (scaffold's control variates) are tabular-scale
+            jkw = {k: v for k, v in wrapper.jit_kwargs.items()
+                   if k != "donate_argnums"}
+            staged = jax.jit(wrapper.fn, out_shardings=self._replicated,
+                             **jkw)
+            self._staged[wrapper] = staged
+        placed = jax.tree_util.tree_map(self._place_leaf, (args, kwargs))
+        return staged(*placed[0], **placed[1])
+
+    def _place_leaf(self, leaf):
+        if isinstance(leaf, (bool, int, float)):
+            return leaf  # static argnums stay python scalars
+        mark = self._marks.get(id(leaf))
+        if mark is not None:
+            self.sharded_puts += 1
+            return jax.device_put(leaf, mark[1])
+        return jax.device_put(leaf, self._replicated)
+
+
+@register_backend(BackendInfo(
+    name="shard",
+    supports_fused=True,
+    supports_secagg=False,
+    supports_sim_time=False,
+    fused_only=True,
+    bit_exact_group="spmd",
+    device_requirements=_DEVICE_HINT,
+    description="SPMD execution of the fused cohort round-step on a device "
+                "mesh (example axis sharded over data, params replicated)",
+))
+class ShardedRunner(LocalRunner):
+    """Idealized round schedule, SPMD round numerics.
+
+    Inherits the lockstep cohort/round loop from ``LocalRunner`` (everyone
+    online, communication free) and overrides the fused-program seam so the
+    cohort step runs sharded on the mesh.
+    """
+
+    def __init__(self, topo=None, *, mesh=None) -> None:
+        super().__init__(topo=topo)
+        if mesh is None:
+            reason = self.available()
+            if reason is not None:
+                raise RuntimeError(f"backend 'shard' unavailable: {reason}")
+            mesh = make_host_data_mesh()
+        self.mesh = mesh
+        self.executor = MeshExecutor(mesh)
+
+    @classmethod
+    def from_setup(cls, setup: RunSetup) -> "ShardedRunner":
+        return cls(topo=setup.topo, mesh=setup.mesh)
+
+    @classmethod
+    def available(cls) -> str | None:
+        if jax.device_count() < 2:
+            return _DEVICE_HINT
+        return None
+
+    def run(self, arm):
+        # belt and braces under direct construction: repro.arms.run already
+        # negotiates these pairs — same rules, single source of truth
+        err = compatibility_error(
+            type(arm), self.info, use_secagg=arm.cfg.use_secagg,
+            fused_rounds=arm.cfg.fused_rounds,
+        )
+        if err is not None:
+            raise ValueError(err)
+        return super().run(arm)
+
+    def _fused_round(self, arm, params, active, t, rng, *,
+                     need_payloads, need_reduced):
+        self.executor.begin_round()
+        with fused.execution_context(self.executor):
+            fr = super()._fused_round(arm, params, active, t, rng,
+                                      need_payloads=need_payloads,
+                                      need_reduced=need_reduced)
+        if fr is None:
+            raise RuntimeError(
+                f"arm {arm.name!r} fell back to the per-participant loop "
+                "under the fused-only 'shard' backend"
+            )
+        return fr

@@ -25,6 +25,18 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, multi_pod: bool = Fals
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_host_data_mesh(n_data: int | None = None):
+    """1-D ("data",) mesh over ``n_data`` devices (default: all available).
+
+    The federated SPMD backend (``launch.federated.ShardedRunner``) shards
+    the fused cohort round-step's *example* axis over it; the tabular-scale
+    params stay replicated.  On CPU CI the devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    n = n_data or jax.device_count()
+    return jax.make_mesh((n,), ("data",))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes carrying the batch/participant dimension."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

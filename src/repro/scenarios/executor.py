@@ -66,10 +66,12 @@ def build_scenario(spec: ScenarioSpec):
     ``nodes``/``topo`` are None for the idealized backend.
     """
     import repro.arms as arms
+    from repro.arms import backends as backends_lib
     from repro.core.dp import DPConfig
     from repro.sim import Topology, nodes_from_trace
 
     arm_cls = arms.get(spec.arm)  # validates the arm name early
+    backend_info = backends_lib.get_backend(spec.backend).info
     model = presets_lib.build_model(spec)
     silos = arms.normalize_participants(presets_lib.build_silos(spec))
     cfg = arms.ArmConfig(
@@ -81,7 +83,7 @@ def build_scenario(spec: ScenarioSpec):
                     noise_multiplier=spec.noise_multiplier,
                     microbatch_size=spec.microbatch_size),
     )
-    if spec.backend != "sim":
+    if not backend_info.supports_sim_time:
         return model, silos, cfg, None, None
     nodes = nodes_from_trace(presets_lib.default_nodes(spec))
     if spec.topology is not None:

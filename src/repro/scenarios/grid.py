@@ -19,11 +19,18 @@ from repro.scenarios.spec import ScenarioSpec
 
 
 def _registered_arms() -> tuple[str, ...]:
-    # deferred: expanding a sweep is the only scenarios path that needs the
-    # (jax-importing) arm registry
+    # deferred: sweep expansion resolves the (jax-importing) arm registry
     import repro.arms as arms
 
     return arms.names()
+
+
+def _registered_backends() -> tuple[str, ...]:
+    """The live backend registry — a newly registered backend joins every
+    backend axis automatically, exactly like arms join the arm axis."""
+    from repro.arms import backends
+
+    return backends.backend_names()
 
 
 @dataclasses.dataclass
@@ -130,11 +137,31 @@ def smoke_2x2() -> SweepGrid:
     )
 
 
+def backend_matrix() -> SweepGrid:
+    """Fused round arms x EVERY registered backend, tiny shapes.
+
+    The backend axis is the live registry, so a new backend lands in this
+    sweep (and the CI job that runs it) with zero wiring.  SecAgg is off in
+    the base spec because not every backend runs the ciphertext wire
+    protocol — with it on, spec validation would (correctly) reject the
+    shard cells at expansion time.  The shard cells need a multi-device
+    process (CI sets XLA_FLAGS=--xla_force_host_platform_device_count=8).
+    """
+    return SweepGrid(
+        "backend-matrix",
+        _tiny_base("backend-matrix").replace(
+            examples=200, rounds=2, hospitals=4, use_secagg=False,
+        ),
+        {"arm": ["decaph", "fl"], "backend": list(_registered_backends())},
+    )
+
+
 SWEEPS: dict[str, Callable[[], SweepGrid]] = {
     "capacity-mini": capacity_mini,
     "capacity": capacity,
     "model-scaling": model_scaling,
     "smoke-2x2": smoke_2x2,
+    "backend-matrix": backend_matrix,
 }
 
 

@@ -59,8 +59,13 @@ def _fit_by_arm(cells: list[dict], x_key: str, y_key: str) -> dict[str, dict]:
 
 
 def scaling_laws(cells: Sequence[dict]) -> dict:
-    """All fits the sweep's cells support, keyed by law name."""
-    sim = [c for c in cells if c.get("backend") == "sim"]
+    """All fits the sweep's cells support, keyed by law name.
+
+    Systems laws fit over cells that carried a simulated-time story (any
+    backend whose runs advanced a simulated clock — zero-traffic arms like
+    ``local`` still count), not a hardcoded backend name.
+    """
+    sim = [c for c in cells if c.get("wall_clock", 0) > 0]
     return {
         "wall_clock_vs_hospitals": _fit_by_arm(sim, "hospitals", "wall_clock"),
         "bytes_vs_hospitals": _fit_by_arm(sim, "hospitals", "bytes_on_wire"),

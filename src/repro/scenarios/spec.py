@@ -12,11 +12,13 @@ change the run's numerics or systems metrics, and ONLY those — ``name`` and
 ``tags`` are labels, excluded from the hash, so renaming a cell or re-tagging
 a sweep never invalidates cached results.
 
-This module is stdlib-only on purpose, as are ``cache`` and ``report``:
-working with specs and cached results never pays the JAX import tax.  (The
-one scenarios path that does import JAX without training anything is
-expanding a registry-backed sweep axis — ``grid._registered_arms`` — which
-a fully-cached ``--sweep`` invocation still pays once.)
+This module imports only the stdlib at module level, as do ``cache`` and
+``report``.  Validation, however, is registry-backed (DESIGN.md §8): the
+``backend`` field is checked against the live backend registry and the
+(arm, backend, secagg/trace) combination is capability-negotiated, both via
+a deferred import of ``repro.arms.backends`` — the same jax-paying exception
+``grid._registered_arms`` already makes for the arm axis, now paid at the
+first spec construction instead of the first sweep expansion.
 """
 
 from __future__ import annotations
@@ -28,7 +30,6 @@ from typing import Any, Mapping
 
 TASKS = ("gemini", "pancreas", "xray")
 MODEL_SIZES = ("small", "medium", "full")
-BACKENDS = ("ideal", "sim")
 
 # bump when the semantics of a field change so stale entries never alias
 SPEC_SCHEMA = 1
@@ -44,7 +45,7 @@ class ScenarioSpec:
     name: str = ""
     task: str = "gemini"            # gemini | pancreas | xray
     arm: str = "decaph"             # any repro.arms registry name
-    backend: str = "sim"            # ideal | sim
+    backend: str = "sim"            # any repro.arms.backends registry name
     hospitals: int = 5
     model_size: str = "small"       # small | medium | full
     rounds: int = 12
@@ -81,8 +82,15 @@ class ScenarioSpec:
     def validate(self) -> None:
         if self.task not in TASKS:
             raise ValueError(f"task {self.task!r} not in {TASKS}")
-        if self.backend not in BACKENDS:
-            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+        # deferred import: registry-backed backend + capability validation
+        from repro.arms import backends as backends_lib
+
+        backends_lib.validate_scenario(
+            arm=self.arm, backend=self.backend, use_secagg=self.use_secagg,
+            needs_sim_time=(self.nodes is not None
+                            or self.topology is not None
+                            or self.straggler_ratio > 0),
+        )
         if self.model_size not in MODEL_SIZES:
             raise ValueError(
                 f"model_size {self.model_size!r} not in {MODEL_SIZES}"

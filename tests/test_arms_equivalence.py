@@ -1,8 +1,13 @@
-"""Arm/Backend acceptance: one set of numerics, two backends, one history.
+"""Arm/Backend acceptance: one set of numerics, N backends, one history.
 
-1. Cross-backend equivalence — for every registered arm, the sim backend
-   under an ideal trace (uniform nodes, effectively infinite bandwidth, zero
-   latency, no dropouts) reproduces the idealized backend's losses/params.
+1. Cross-backend equivalence — driven by the registry's ``bit_exact_group``
+   capability (DESIGN.md §8), not a hardcoded backend pair: for every
+   registered arm and every pair of backends sharing a group, running under
+   ideal conditions (uniform nodes, effectively infinite bandwidth, zero
+   latency, no dropouts) must reproduce losses/params bit for bit.  A
+   backend in its own group (e.g. ``shard``, whose partitioned reductions
+   re-associate float math) is exercised to a documented tolerance in
+   ``tests/test_backends.py`` instead.
 2. Seed-for-seed shims — the deprecation shims in ``repro.core.federation``
    reproduce the pre-refactor results exactly, verified against a frozen
    snapshot of the historical loops (``tests/_legacy_federation.py``).
@@ -14,6 +19,7 @@ import numpy as np
 import pytest
 
 import repro.arms as arms
+from repro.arms import backends as backends_lib
 from repro.core.dp import DPConfig
 from repro.sim import Link, Topology, nodes_from_trace
 
@@ -25,6 +31,17 @@ from _legacy_federation import (
 
 H = 4
 _IDEAL_LINK = Link(bandwidth=1e15, latency=0.0)
+
+
+def _runnable_group_pairs() -> list[tuple[str, str]]:
+    """(reference, other) backend pairs promised bit-identical by their
+    shared ``bit_exact_group``, restricted to backends this process can
+    run (``shard`` needs forced host devices and its own subprocess)."""
+    pairs = []
+    for _group, names in backends_lib.bit_exact_groups().items():
+        ready = [n for n in names if backends_lib.availability(n) is None]
+        pairs += [(ready[0], other) for other in ready[1:]]
+    return pairs
 
 
 def _make_model(d):
@@ -91,32 +108,60 @@ def _assert_trees_close(a, b, atol=0.0):
 # -- 1. cross-backend equivalence -------------------------------------------
 
 
+def _run_backend(backend_name, arm_name, model, silos, cfg, topo):
+    """Run on a registry backend under ideal conditions (capability-aware:
+    sim-time backends get uniform nodes + the ideal-link topology)."""
+    info = backends_lib.get_backend(backend_name).info
+    nodes = _ideal_nodes() if info.supports_sim_time else None
+    return arms.run(arm_name, model, silos, cfg, backend=backend_name,
+                    nodes=nodes, topo=topo)
+
+
+@pytest.mark.parametrize("pair", _runnable_group_pairs(),
+                         ids=lambda p: f"{p[0]}=={p[1]}")
 @pytest.mark.parametrize("arm_name", arms.names())
-def test_sim_matches_ideal_under_ideal_trace(arm_name):
-    """SimRunner on an ideal trace == LocalRunner, for every registered arm."""
+def test_bit_exact_groups_agree_under_ideal_trace(arm_name, pair):
+    """Backends sharing a ``bit_exact_group`` reproduce each other bit for
+    bit, for every registered arm, under an ideal trace."""
+    ref_name, other_name = pair
     silos = _silos()
     model = _make_model(5)
     cfg = _cfg()
     topo = _ideal_topology(arms.get(arm_name).topology_kind)
 
-    ideal = arms.run(arm_name, model, silos, cfg, topo=topo)
-    simmed = arms.run(arm_name, model, silos, cfg, backend="sim",
-                      nodes=_ideal_nodes(), topo=topo)
+    ref = _run_backend(ref_name, arm_name, model, silos, cfg, topo)
+    other = _run_backend(other_name, arm_name, model, silos, cfg,
+                         _ideal_topology(arms.get(arm_name).topology_kind))
 
-    assert ideal.rounds_completed == simmed.rounds_completed
-    _assert_trees_close(ideal.params, simmed.params)
-    if ideal.per_node_params is not None:
-        assert simmed.per_node_params is not None
-        for a, b in zip(ideal.per_node_params, simmed.per_node_params):
+    assert ref.rounds_completed == other.rounds_completed
+    _assert_trees_close(ref.params, other.params)
+    if ref.per_node_params is not None:
+        assert other.per_node_params is not None
+        for a, b in zip(ref.per_node_params, other.per_node_params):
             _assert_trees_close(a, b)
     # losses agree wherever both backends log them (round arms)
-    if ideal.logs and simmed.logs:
+    if ref.logs and other.logs:
         np.testing.assert_allclose(
-            [l.loss for l in ideal.logs], [l.loss for l in simmed.logs],
+            [l.loss for l in ref.logs], [l.loss for l in other.logs],
             rtol=0.0, atol=0.0,
         )
-    assert ideal.epsilon == pytest.approx(simmed.epsilon, abs=1e-9)
-    # the sim side additionally carries the systems story
+    assert ref.epsilon == pytest.approx(other.epsilon, abs=1e-9)
+
+
+def test_registry_pairs_cover_the_ideal_sim_promise():
+    """The host group must keep pairing the idealized and discrete-event
+    backends — losing it would silently drop the PR-2 acceptance test."""
+    assert ("ideal", "sim") in _runnable_group_pairs()
+
+
+def test_sim_carries_the_systems_story():
+    """Only sim-time backends produce a SimTiming section."""
+    silos = _silos()
+    model = _make_model(5)
+    cfg = _cfg()
+    ideal = arms.run("decaph", model, silos, cfg)
+    simmed = arms.run("decaph", model, silos, cfg, backend="sim",
+                      nodes=_ideal_nodes(), topo=_ideal_topology("full"))
     assert simmed.timing is not None and ideal.timing is None
     assert simmed.timing.wall_clock > 0
 

@@ -1,0 +1,192 @@
+"""Backend registry, capability negotiation, and the SPMD ``shard`` backend.
+
+The shard-vs-ideal equivalence runs in a subprocess with 8 forced host
+devices (the main test process keeps the single default device, like the
+dry-run and SPMD-numeric suites).  Tolerance contract (DESIGN.md §8):
+``shard`` sits in its own ``bit_exact_group`` because GSPMD's partitioned
+reductions re-associate float sums — it must match the idealized backend to
+the same atol=1e-5 class as the fused-vs-loop comparison, not bit for bit.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+import repro.arms as arms
+from repro.arms import backends
+from repro.core.dp import DPConfig
+
+from test_arms_equivalence import _cfg, _make_model, _silos
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# -- registry -----------------------------------------------------------------
+
+
+def test_registry_enumerates_every_backend():
+    names = backends.backend_names()
+    assert {"ideal", "sim", "shard"} <= set(names)
+    registry = backends.backend_registry()
+    assert registry["sim"].supports_sim_time
+    assert not registry["ideal"].supports_sim_time
+    assert registry["shard"].fused_only
+    assert not registry["shard"].supports_secagg
+    assert registry["shard"].device_requirements  # documented, non-empty
+
+
+def test_bit_exact_groups_partition_backends():
+    groups = backends.bit_exact_groups()
+    assert groups["host"] == ("ideal", "sim")
+    assert groups["spmd"] == ("shard",)
+
+
+def test_register_backend_rejects_duplicate_name():
+    with pytest.raises(ValueError, match="already registered"):
+
+        @backends.register_backend(backends.BackendInfo(name="ideal"))
+        class Impostor:  # pragma: no cover - never instantiated
+            pass
+
+
+def test_get_backend_unknown_lists_the_registry():
+    with pytest.raises(KeyError, match="registered backends"):
+        backends.get_backend("cloud")
+
+
+# -- capability negotiation ---------------------------------------------------
+
+
+def test_run_rejects_secagg_arm_on_shard():
+    """decaph's ciphertext uploads are ruled out before any compute."""
+    with pytest.raises(ValueError, match="SecAgg"):
+        arms.run("decaph", _make_model(5), _silos(),
+                 _cfg(use_secagg=True), backend="shard")
+
+
+def test_run_rejects_node_arms_on_shard():
+    with pytest.raises(ValueError, match="fused-capable round arms"):
+        arms.run("gossip", _make_model(5), _silos(), _cfg(),
+                 backend="shard")
+
+
+def test_run_rejects_loop_path_on_shard():
+    with pytest.raises(ValueError, match="fused_rounds=False"):
+        arms.run("decaph", _make_model(5), _silos(),
+                 _cfg(fused_rounds=False), backend="shard")
+
+
+@pytest.mark.skipif(jax.device_count() > 1,
+                    reason="this process already has multiple XLA devices, "
+                           "so shard is available here")
+def test_shard_reports_device_requirements_on_one_device():
+    """This process has one CPU device: availability names the fix, and
+    construction fails loudly with it (negotiation passes first — the
+    arm/config pair itself is fine)."""
+    assert backends.availability("shard") is not None
+    assert "XLA_FLAGS" in backends.availability("shard")
+    with pytest.raises(RuntimeError, match="XLA_FLAGS"):
+        arms.run("decaph", _make_model(5), _silos(), _cfg(),
+                 backend="shard")
+
+
+def test_sim_requires_nodes_via_setup():
+    with pytest.raises(ValueError, match="nodes"):
+        arms.run("decaph", _make_model(5), _silos(), _cfg(), backend="sim")
+
+
+# -- CLI enumeration ----------------------------------------------------------
+
+
+def test_cli_list_shows_backends(capsys):
+    from repro.run import main
+
+    assert main(["--list"]) == 0
+    out = capsys.readouterr().out
+    assert "backends:" in out
+    for name in backends.backend_names():
+        assert name in out
+    if backends.availability("shard"):
+        assert "unavailable here" in out  # the device requirement surfaces
+
+
+# -- shard-vs-ideal equivalence (subprocess: needs 8 placeholder devices) -----
+
+_EQUIV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+
+import repro.arms as arms
+from repro.core.dp import DPConfig
+from repro.data.synthetic import make_gemini_like
+from repro.models.tabular import linear_model
+from repro.launch.federated import ShardedRunner
+
+assert jax.device_count() == 8
+
+silos = arms.normalize_participants(
+    make_gemini_like(seed=0, n_total=720, n_silos=5, n_features=8)
+)
+model = linear_model(8)
+
+results = {}
+fused_arms = sorted(
+    n for n in arms.names()
+    if getattr(arms.get(n), "fused_capable", False)
+)
+for name in fused_arms:
+    cfg = arms.ArmConfig(
+        rounds=3, batch_size=48, lr=0.3, seed=0, use_secagg=False,
+        fl_local_steps=2,
+        dp=DPConfig(clip_norm=1.0, noise_multiplier=0.8, microbatch_size=8),
+    )
+    ideal = arms.run(name, model, silos, cfg)
+    runner = ShardedRunner()
+    shard = runner.run(arms.get(name)(model, silos, cfg))
+    la = jax.tree_util.tree_leaves(ideal.params)
+    lb = jax.tree_util.tree_leaves(shard.params)
+    results[name] = {
+        "max_abs_diff": max(
+            float(np.abs(np.asarray(a) - np.asarray(b)).max())
+            for a, b in zip(la, lb)
+        ),
+        "rounds": [ideal.rounds_completed, shard.rounds_completed],
+        "epsilon": [float(ideal.epsilon), float(shard.epsilon)],
+        "sharded_puts": runner.executor.sharded_puts,
+        "backend_label": shard.backend,
+    }
+print("RESULTS" + json.dumps({"arms": fused_arms, "cells": results}))
+"""
+
+
+@pytest.mark.slow
+def test_shard_matches_ideal_within_documented_tolerance():
+    """Every fused-capable arm, shard vs ideal, atol 1e-5 on final params —
+    and the mesh genuinely sharded the cohort batches (sharded_puts > 0)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _EQUIV_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    payload = [ln for ln in proc.stdout.splitlines()
+               if ln.startswith("RESULTS")][0]
+    report = json.loads(payload[len("RESULTS"):])
+    # the registry drives coverage: every fused-capable arm must be here
+    assert {"decaph", "fl", "fedprox", "scaffold", "primia"} <= set(
+        report["arms"]
+    )
+    for name, cell in report["cells"].items():
+        assert cell["rounds"][0] == cell["rounds"][1], name
+        assert cell["max_abs_diff"] <= 1e-5, (name, cell)
+        assert cell["epsilon"][0] == pytest.approx(cell["epsilon"][1]), name
+        assert cell["sharded_puts"] > 0, name  # SPMD actually engaged
+        assert cell["backend_label"] == "shard"

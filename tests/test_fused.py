@@ -19,7 +19,7 @@ from repro.core.dp import DPConfig
 from test_arms_equivalence import _cfg, _make_model, _silos
 
 ROUND_ARMS = ["decaph", "fl", "fedprox", "scaffold", "primia"]
-FUSED_ARMS = ["decaph", "fl", "fedprox", "scaffold"]
+FUSED_ARMS = ["decaph", "fl", "fedprox", "scaffold", "primia"]
 
 
 def _run(arm, cfg):
@@ -57,6 +57,27 @@ def test_fused_fl_fedavg_matches_loop(local_steps):
     fused_rep = _run("fl", cfg)
     loop_rep = _run("fl", dataclasses.replace(cfg, fused_rounds=False))
     _leaves_close(fused_rep.params, loop_rep.params, atol=1e-5)
+
+
+def test_fused_primia_ragged_retirement_matches_loop():
+    """primia's fused round pads the ragged per-client Poisson draws (each
+    client has its own rate AND pad) to the cohort max, and keeps matching
+    the loop path bit-for-bit on the accountants even as small clients
+    exhaust their local budgets and the active cohort shrinks."""
+    model = _make_model(5)
+    # unequal silos: the small clients' higher sampling rates exhaust their
+    # local budgets first (the legacy-shim retirement setup)
+    silos = _silos(seed=3, sizes=(300, 60, 60))
+    cfg = _cfg(rounds=20, epsilon_budget=2.0,
+               dp=DPConfig(clip_norm=1.0, noise_multiplier=1.0,
+                           microbatch_size=8))
+    fused_rep = arms.run("primia", model, silos, cfg)
+    loop_rep = arms.run("primia", model, silos,
+                        dataclasses.replace(cfg, fused_rounds=False))
+    assert fused_rep.rounds_completed == loop_rep.rounds_completed
+    assert fused_rep.rounds_completed < 20  # retirement actually happened
+    _leaves_close(fused_rep.params, loop_rep.params, atol=1e-5)
+    assert fused_rep.epsilon == pytest.approx(loop_rep.epsilon, abs=1e-12)
 
 
 def test_fused_decaph_secagg_matches_loop():
