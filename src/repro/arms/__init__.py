@@ -67,6 +67,7 @@ def run(
     nodes=None,
     topo=None,
     mesh=None,
+    on_round=None,
 ) -> RunReport:
     """Instantiate arm ``name`` and execute it on the chosen backend.
 
@@ -77,12 +78,16 @@ def run(
     ``HospitalNode`` per participant) for simulated time, ``mesh`` for SPMD —
     and rejects what it requires but did not get.  ``topo`` defaults to the
     arm's natural topology.
+
+    ``on_round(t, params)`` is called after every completed round — the
+    checkpoint-handoff seam that feeds the serving tier (DESIGN.md §9).
     """
     arm_cls = get(name)
     backend_cls = backends.get_backend(backend)
     backends.validate_run(arm_cls, backend_cls.info, cfg)
     runner = backend_cls.from_setup(
-        backends.RunSetup(nodes=nodes, topo=topo, mesh=mesh)
+        backends.RunSetup(nodes=nodes, topo=topo, mesh=mesh,
+                          on_round=on_round)
     )
     return runner.run(arm_cls(model, participants, cfg))
 

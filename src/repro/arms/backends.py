@@ -100,6 +100,12 @@ class RunSetup:
     nodes: Sequence[Any] | None = None  # HospitalNode list (sim-time backends)
     topo: Any | None = None             # Topology override
     mesh: Any | None = None             # jax Mesh override (SPMD backends)
+    # Round-end observer: called as ``on_round(t, params)`` after every
+    # COMPLETED round (post-aggregate, post-accounting) on every backend.
+    # This is the checkpoint-handoff seam (DESIGN.md §9): wiring a
+    # ``serve.handoff.CheckpointPublisher.publish`` here feeds a live
+    # serving tier from any arm on any backend.
+    on_round: Callable[[int, Any], None] | None = None
 
 
 @runtime_checkable

@@ -34,9 +34,7 @@ loop O(H).
 
 from __future__ import annotations
 
-import contextlib
 import dataclasses
-import functools
 from typing import Any, Callable, Sequence
 
 import jax
@@ -44,87 +42,20 @@ import numpy as np
 
 from repro.arms.base import Contribution, Participant, poisson_batch
 
-PyTree = Any
-
 # -- jit dispatch accounting -------------------------------------------------
+# Hoisted to ``repro.instrument`` so the serving tier (DESIGN.md §9) shares
+# the same counter without importing the arms package; re-exported here for
+# every arm module, benchmark and test that grew up on ``fused.X``.
+from repro.instrument import (  # noqa: F401
+    active_executor,
+    execution_context,
+    instrumented_jit,
+    instrumented_jit_pair,
+    jit_dispatches,
+    reset_jit_dispatches,
+)
 
-_jit_dispatch_count = 0
-
-# Active cohort-program executor (DESIGN.md §8).  ``None`` means plain jit on
-# the default device; an SPMD backend installs a ``launch.federated``
-# MeshExecutor for the duration of each fused round, which re-dispatches the
-# same program onto a device mesh with explicit shardings.
-_EXECUTOR = None
-
-
-@contextlib.contextmanager
-def execution_context(executor):
-    """Route every ``instrumented_jit`` call through ``executor`` while open."""
-    global _EXECUTOR
-    prev, _EXECUTOR = _EXECUTOR, executor
-    try:
-        yield
-    finally:
-        _EXECUTOR = prev
-
-
-def active_executor():
-    return _EXECUTOR
-
-
-def instrumented_jit(fn: Callable, **jit_kwargs) -> Callable:
-    """``jax.jit`` that counts program launches (``jit_dispatches()``).
-
-    The count is the benchmark's dispatch metric: eager jnp ops are not
-    included, so it measures "how many compiled programs does one round
-    launch" — O(H) on the legacy loop, O(1) on the fused path.
-
-    The wrapper carries the raw ``fn`` and its jit kwargs so a mesh
-    executor (``execution_context``) can re-stage the same program with
-    explicit shardings instead of the plain single-device jit.
-    """
-    compiled = jax.jit(fn, **jit_kwargs)
-
-    @functools.wraps(fn)
-    def wrapper(*args, **kwargs):
-        global _jit_dispatch_count
-        _jit_dispatch_count += 1
-        if _EXECUTOR is not None:
-            return _EXECUTOR.execute(wrapper, args, kwargs)
-        return compiled(*args, **kwargs)
-
-    wrapper.jitted = compiled
-    wrapper.fn = fn
-    wrapper.jit_kwargs = dict(jit_kwargs)
-    return wrapper
-
-
-def instrumented_jit_pair(fn: Callable, *, reduced_pos: int = 1,
-                          **jit_kwargs) -> tuple[Callable, Callable]:
-    """(full, slim) jits of a cohort function whose output tuple carries the
-    in-jit cohort reduction at ``reduced_pos``.  The slim variant drops that
-    output, so XLA dead-code-eliminates the reduction entirely — backends
-    that can't consume it (sim transport, SecAgg uploads) don't pay for it.
-    """
-
-    def dropped(*args, **kwargs):
-        out = fn(*args, **kwargs)
-        return out[:reduced_pos] + out[reduced_pos + 1:]
-
-    return (
-        instrumented_jit(fn, **jit_kwargs),
-        instrumented_jit(dropped, **jit_kwargs),
-    )
-
-
-def jit_dispatches() -> int:
-    """Total instrumented jit program launches since the last reset."""
-    return _jit_dispatch_count
-
-
-def reset_jit_dispatches() -> None:
-    global _jit_dispatch_count
-    _jit_dispatch_count = 0
+PyTree = Any
 
 
 # -- host-side cohort stacking ----------------------------------------------
@@ -188,7 +119,7 @@ def stack_poisson(
                else lambda i: rate)
     pad_of = (pad.__getitem__ if not isinstance(pad, int)
               else lambda i: pad)
-    executor = _EXECUTOR
+    executor = active_executor()
     k_steps = 1 if steps is None else steps
     draws: list[list[tuple[dict, np.ndarray, int]]] = []
     pad_to = max(pad_of(i) for i in active)

@@ -153,12 +153,13 @@ class _SimServices(AggregationServices):
 class LocalRunner:
     """Idealized lockstep execution of any registered arm."""
 
-    def __init__(self, topo: Topology | None = None) -> None:
+    def __init__(self, topo: Topology | None = None, on_round=None) -> None:
         self.topo = topo  # only node arms (gossip) consult it
+        self.on_round = on_round
 
     @classmethod
     def from_setup(cls, setup: RunSetup) -> "LocalRunner":
-        return cls(topo=setup.topo)
+        return cls(topo=setup.topo, on_round=setup.on_round)
 
     def run(self, arm: Arm) -> RunReport:
         if isinstance(arm, RoundArm):
@@ -217,6 +218,8 @@ class LocalRunner:
                 arm.account()
                 logs.append(RoundLog(t, dst, outcome.loss, arm.epsilon(),
                                      outcome.aggregate_batch))
+                if self.on_round is not None:
+                    self.on_round(t, params)  # checkpoint-handoff seam
                 if arm.should_stop():
                     break
             elif arm.void_logs:
@@ -261,6 +264,10 @@ class LocalRunner:
             logs.append(RoundLog(s, -1, float(np.mean(losses)),
                                  arm.epsilon(), consumed))
         params, per_node = arm.consensus(per_node)
+        if self.on_round is not None:
+            # node arms have no server rounds; publish the consensus model
+            # once, stamped with the completed step count
+            self.on_round(min(steps_done), params)
         return RunReport(
             params=params, logs=logs, epsilon=arm.epsilon(),
             rounds_completed=min(steps_done), arm=arm.name,
@@ -298,9 +305,10 @@ class SimRunner:
     """Discrete-event execution of any registered arm (PR-1 engine)."""
 
     def __init__(self, nodes: Sequence[HospitalNode],
-                 topo: Topology | None = None) -> None:
+                 topo: Topology | None = None, on_round=None) -> None:
         self.nodes = list(nodes)
         self.topo = topo  # None -> the arm's natural topology, resolved in run
+        self.on_round = on_round
         # re-resolve per run: a reused runner must not pin the FIRST arm's
         # natural topology onto a second arm with a different topology_kind
         self._auto_topo = topo is None
@@ -311,7 +319,7 @@ class SimRunner:
             raise ValueError(
                 "backend 'sim' needs nodes= (HospitalNode list)"
             )
-        return cls(setup.nodes, setup.topo)
+        return cls(setup.nodes, setup.topo, on_round=setup.on_round)
 
     def _pop(self, engine: EventEngine):
         """Pop the next event, folding scheduled link churn into the topology
@@ -598,6 +606,8 @@ class SimRunner:
             completed += 1
             logs.append(RoundLog(t, dst, outcome.loss, arm.epsilon(),
                                  outcome.aggregate_batch))
+            if self.on_round is not None:
+                self.on_round(t, params)  # checkpoint-handoff seam
             if arm.should_stop():
                 break
 
@@ -723,6 +733,10 @@ class SimRunner:
             handler(ev)
 
         params, per_node = arm.consensus(per_node)
+        if self.on_round is not None:
+            # node arms have no server rounds; publish the consensus model
+            # once, stamped with the completed step count
+            self.on_round(min(steps_done), params)
         return RunReport(
             params=params, logs=[], epsilon=arm.epsilon(),
             rounds_completed=min(steps_done), arm=arm.name,

@@ -1,5 +1,9 @@
 """Msgpack pytree checkpointing."""
 
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import (
+    CorruptCheckpointError,
+    load_checkpoint,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "CorruptCheckpointError"]

@@ -2,7 +2,14 @@
 
 Arrays are gathered to host (fully-addressable) and serialised with dtype /
 shape; the tree structure is stored as nested msgpack maps.  Step metadata
-travels in the same file.  Atomic write via temp-file rename.
+travels in the same file.  Atomic write via temp-file rename — a reader can
+never observe a half-written checkpoint under the final name, which is what
+lets the serving tier (``repro.serve.handoff``) watch a directory and load
+whatever appears without coordinating with the writer.
+
+Corrupted or truncated files (a torn copy, a crashed writer using plain
+``open``) raise ``CorruptCheckpointError`` instead of whatever msgpack's
+internals happen to throw, so watchers can skip-and-retry cleanly.
 """
 
 from __future__ import annotations
@@ -19,6 +26,14 @@ import numpy as np
 PyTree = Any
 
 _ARR = "__arr__"
+
+# Stamped into every payload; load rejects files that don't carry it (an
+# arbitrary msgpack blob that happens to parse is still not a checkpoint).
+_FORMAT = "repro-ckpt-v1"
+
+
+class CorruptCheckpointError(RuntimeError):
+    """The file is not a complete, well-formed checkpoint."""
 
 
 def _pack_leaf(x):
@@ -56,6 +71,7 @@ def save_checkpoint(path: str, tree: PyTree, step: int = 0,
                     metadata: dict | None = None) -> None:
     tree = jax.device_get(tree)
     payload = {
+        "format": _FORMAT,
         "step": step,
         "metadata": metadata or {},
         "tree": _pack(tree),
@@ -73,6 +89,37 @@ def save_checkpoint(path: str, tree: PyTree, step: int = 0,
 
 
 def load_checkpoint(path: str) -> tuple[PyTree, int, dict]:
+    """Load ``path`` -> (tree, step, metadata).
+
+    Raises ``CorruptCheckpointError`` on truncated, torn, or non-checkpoint
+    files (msgpack decode failures, missing payload keys, or array bytes
+    that do not match their declared dtype/shape); ``FileNotFoundError``
+    passes through untouched so watchers can distinguish "not there yet"
+    from "there but broken".
+    """
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
-    return _unpack(payload["tree"]), payload["step"], payload["metadata"]
+        raw = f.read()
+    try:
+        payload = msgpack.unpackb(raw, raw=False, strict_map_key=False)
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"{path}: not a complete msgpack document ({e})"
+        ) from e
+    if not isinstance(payload, dict) or "tree" not in payload \
+            or "step" not in payload:
+        raise CorruptCheckpointError(
+            f"{path}: msgpack document is not a checkpoint payload"
+        )
+    fmt = payload.get("format", _FORMAT)  # pre-format files pass
+    if fmt != _FORMAT:
+        raise CorruptCheckpointError(
+            f"{path}: unsupported checkpoint format {fmt!r}"
+        )
+    try:
+        tree = _unpack(payload["tree"])
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"{path}: array payload does not match its declared "
+            f"dtype/shape ({e})"
+        ) from e
+    return tree, payload["step"], payload.get("metadata", {})

@@ -1,0 +1,102 @@
+"""Jit dispatch accounting shared by the training and serving hot paths.
+
+``instrumented_jit`` is ``jax.jit`` plus a process-wide program-launch
+counter.  It started life inside ``repro.arms.fused`` (DESIGN.md §7) where
+``benchmarks/hotpath.py`` uses it to certify the fused round-step's
+O(1)-dispatches-per-round contract; the serving tier (``repro.serve``,
+DESIGN.md §9) asserts the same invariant for steady-state decode — one
+program launch per token — so the counter lives here, neutral ground
+below both subsystems.  ``repro.arms.fused`` re-exports every name, so
+arm code and benchmarks keep importing it from there.
+
+The count is a structural metric, not a timer: eager jnp ops are not
+included, so it measures "how many compiled programs does this phase
+launch" — O(H) on the legacy round loop vs O(1) fused; O(prompt_len) on
+the legacy Python prefill vs O(1) on the jitted prefill program.
+
+``execution_context`` routes every instrumented call through an installed
+executor (the SPMD ``MeshExecutor`` in ``launch/federated.py``) so a mesh
+backend can re-stage the same program with explicit shardings.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Callable
+
+import jax
+
+_jit_dispatch_count = 0
+
+# Active cohort-program executor (DESIGN.md §8).  ``None`` means plain jit on
+# the default device; an SPMD backend installs a ``launch.federated``
+# MeshExecutor for the duration of each fused round, which re-dispatches the
+# same program onto a device mesh with explicit shardings.
+_EXECUTOR = None
+
+
+@contextlib.contextmanager
+def execution_context(executor):
+    """Route every ``instrumented_jit`` call through ``executor`` while open."""
+    global _EXECUTOR
+    prev, _EXECUTOR = _EXECUTOR, executor
+    try:
+        yield
+    finally:
+        _EXECUTOR = prev
+
+
+def active_executor():
+    return _EXECUTOR
+
+
+def instrumented_jit(fn: Callable, **jit_kwargs) -> Callable:
+    """``jax.jit`` that counts program launches (``jit_dispatches()``).
+
+    The wrapper carries the raw ``fn`` and its jit kwargs so a mesh
+    executor (``execution_context``) can re-stage the same program with
+    explicit shardings instead of the plain single-device jit.
+    """
+    compiled = jax.jit(fn, **jit_kwargs)
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        global _jit_dispatch_count
+        _jit_dispatch_count += 1
+        if _EXECUTOR is not None:
+            return _EXECUTOR.execute(wrapper, args, kwargs)
+        return compiled(*args, **kwargs)
+
+    wrapper.jitted = compiled
+    wrapper.fn = fn
+    wrapper.jit_kwargs = dict(jit_kwargs)
+    return wrapper
+
+
+def instrumented_jit_pair(fn: Callable, *, reduced_pos: int = 1,
+                          **jit_kwargs) -> tuple[Callable, Callable]:
+    """(full, slim) jits of a cohort function whose output tuple carries the
+    in-jit cohort reduction at ``reduced_pos``.  The slim variant drops that
+    output, so XLA dead-code-eliminates the reduction entirely — backends
+    that can't consume it (sim transport, SecAgg uploads) don't pay for it.
+    """
+
+    def dropped(*args, **kwargs):
+        out = fn(*args, **kwargs)
+        return out[:reduced_pos] + out[reduced_pos + 1:]
+
+    return (
+        instrumented_jit(fn, **jit_kwargs),
+        instrumented_jit(dropped, **jit_kwargs),
+    )
+
+
+def jit_dispatches() -> int:
+    """Total instrumented jit program launches since the last reset."""
+    return _jit_dispatch_count
+
+
+def reset_jit_dispatches() -> None:
+    global _jit_dispatch_count
+    _jit_dispatch_count = 0

@@ -1,7 +1,14 @@
-"""Batched serving driver: prefill + decode loop with KV cache.
+"""Static-batch serving driver — a thin shim over ``repro.serve``.
 
-Demonstrates the serve_step path end to end on host devices (the dry-run
-lowers the same program on the production mesh).
+Kept for its original purpose (a one-command smoke of the decode path on
+host devices; the dry-run lowers the same programs on the production mesh)
+but the machinery now lives in ``repro.serve.ServeEngine``: prompts prefill
+in ONE jitted program each (a scan of the decode step — not the old
+O(prompt_len) Python dispatch loop) and every generated token, including
+the first, is sampled at ``--temperature`` inside the jitted step.
+
+For continuous batching, open-loop traffic, and live federation-checkpoint
+hot-swaps, use ``python -m repro.serve``.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
@@ -14,73 +21,40 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHITECTURES, get_smoke_config
-from repro.models import transformer as tf
-from repro.models import attention as attn_lib
+from repro.serve.engine import ServeConfig, ServeEngine, batch_generate
 
 
 def main() -> None:
+    decoder_only = [a for a in ARCHITECTURES
+                    if not get_smoke_config(a).is_encoder_decoder]
     p = argparse.ArgumentParser()
-    p.add_argument("--arch", choices=list(ARCHITECTURES), default="smollm-360m")
+    p.add_argument("--arch", choices=decoder_only, default="smollm-360m")
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--temperature", type=float, default=0.0)
     args = p.parse_args()
 
-    cfg = get_smoke_config(args.arch)
-    key = jax.random.key(0)
-    params = tf.init(cfg, key)
-    b = args.batch
-    max_len = args.prompt_len + args.gen
-    prompts = jax.random.randint(
-        jax.random.fold_in(key, 1), (b, args.prompt_len), 0, cfg.vocab_size
-    )
+    engine = ServeEngine(ServeConfig(
+        arch=args.arch,
+        slots=args.batch,
+        max_len=args.prompt_len + args.gen,
+        temperature=args.temperature,
+    ))
+    cfg = engine.model_cfg
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    ), np.int32)
 
-    cache = tf.init_cache(cfg, b, max_len)
-    if cfg.is_encoder_decoder:
-        frames = jax.random.normal(
-            jax.random.fold_in(key, 2), (b, cfg.n_audio_ctx, cfg.d_model)
-        ) * 0.1
-        enc = tf._encode(cfg, params, frames)
-
-        def fill(stacked_params):
-            def one(lp):
-                return attn_lib.cross_kv_cache(lp["e0"]["cross"], enc, cfg)
-            return jax.vmap(one)(stacked_params)
-
-        cache["group0"]["e0"]["cross"] = fill(params["group0"])
-
-    decode = jax.jit(
-        lambda p_, c_, t_, i_: tf.decode_step(cfg, p_, c_, t_, i_),
-        donate_argnums=(1,),
-    )
-
-    # prefill via repeated decode (smoke-scale; prod uses the prefill program)
     t0 = time.time()
-    tok = prompts[:, :1]
-    for t in range(args.prompt_len):
-        logits, cache = decode(params, cache, prompts[:, t:t + 1],
-                               jnp.asarray(t, jnp.int32))
-    out = []
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    for t in range(args.prompt_len, max_len):
-        out.append(np.asarray(tok))
-        logits, cache = decode(params, cache, tok, jnp.asarray(t, jnp.int32))
-        if args.temperature > 0:
-            key, sk = jax.random.split(key)
-            tok = jax.random.categorical(
-                sk, logits[:, -1] / args.temperature
-            )[:, None].astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    gen = batch_generate(engine, prompts, args.gen)
     dt = time.time() - t0
-    gen = np.concatenate(out, axis=1)
     print(f"arch={args.arch} generated {gen.shape} in {dt:.2f}s "
-          f"({b * args.gen / dt:.1f} tok/s)")
+          f"({args.batch * args.gen / dt:.1f} tok/s, "
+          f"{engine.decode_dispatches + engine.admit_dispatches} dispatches)")
     print("sample tokens:", gen[0][:16].tolist())
 
 

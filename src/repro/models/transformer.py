@@ -9,6 +9,9 @@ Functional API (all pure, jit/pjit-friendly):
   init_cache(cfg, batch, max_len)         -> cache pytree
   cache_spec(cfg, batch, max_len)         -> ShapeDtypeStruct pytree (dry-run)
   decode_step(cfg, params, cache, tokens, index) -> (logits, cache)
+  decode_step_positions(cfg, params, cache, tokens, positions)
+                                          -> (logits, cache)  [per-slot index]
+  prefill(cfg, params, cache, tokens)     -> (last_logits, cache)  [one program]
 
 Layer stacking uses ``lax.scan`` over vmap-stacked per-pattern parameter
 pytrees (one group per (repeat, pattern) entry in cfg.stack) — compile time
@@ -461,3 +464,54 @@ def decode_step(cfg, params, cache, tokens, index) -> tuple[jax.Array, PyTree]:
     else:
         logits = x @ params[pname("head", "embed", "vocab")].astype(cfg.cdtype)
     return logits, new_cache
+
+
+def decode_step_positions(cfg, params, cache, tokens, positions
+                          ) -> tuple[jax.Array, PyTree]:
+    """Per-slot decode: each batch row advances at its OWN sequence position.
+
+    ``tokens``: [B,1] int32; ``positions``: [B] int32 — the write index for
+    each row.  This is the continuous-batching requirement (DESIGN.md §9):
+    serving slots are admitted and evicted independently, so the batch is
+    never position-aligned.  Implemented as a vmap of ``decode_step`` over
+    the batch axis — every cache leaf carries batch at axis 1 (after the
+    stacked-layer axis), params are broadcast — so the per-row
+    ``dynamic_update_slice`` becomes a batched scatter at per-row indices
+    and the causal mask is evaluated against each row's own position.
+    """
+
+    def one(row_cache, tok, idx):
+        c = jax.tree_util.tree_map(lambda x: x[:, None], row_cache)
+        logits, c = decode_step(cfg, params, c, tok[None], idx)
+        return logits[0], jax.tree_util.tree_map(lambda x: x[:, 0], c)
+
+    return jax.vmap(one, in_axes=(1, 0, 0), out_axes=(0, 1))(
+        cache, tokens, positions
+    )
+
+
+def prefill(cfg, params, cache, tokens) -> tuple[jax.Array, PyTree]:
+    """Prefill a whole prompt in ONE program: scan ``decode_step`` over the
+    prompt positions.  ``tokens``: [B,S] int32 (S static).  Returns the
+    last position's logits ([B,1,V] — what the first generated token is
+    sampled from) and the cache filled through position S-1.
+
+    A scan of the decode step (rather than a masked ``forward``) is exact
+    for every mixer family — SSM recurrences advance token by token, so
+    right-padding a prompt would corrupt their state; callers keep S exact
+    and bucket prompt lengths to bound retracing.
+    """
+    b, s = tokens.shape
+
+    def body(carry, xs):
+        c, _ = carry
+        tok, idx = xs
+        logits, c = decode_step(cfg, params, c, tok, idx)
+        return (c, logits), None
+
+    init_logits = jnp.zeros((b, 1, cfg.vocab_size), cfg.cdtype)
+    (cache, logits), _ = jax.lax.scan(
+        body, (cache, init_logits),
+        (tokens.T[:, :, None], jnp.arange(s, dtype=jnp.int32)),
+    )
+    return logits, cache

@@ -1,0 +1,56 @@
+"""repro.serve — continuous-batching serving fed live by federation rounds.
+
+The serving tier (DESIGN.md §9) closes the loop the paper leaves open: a
+model that hospitals train collaboratively has to be *served* somewhere,
+and the federation keeps improving it round by round.  Three pieces:
+
+  * ``ServeEngine`` (``engine``) — fixed-slot continuous batching over any
+    decoder-only arch; exactly one program launch + one host sync per
+    steady-state decode step;
+  * ``CheckpointPublisher`` / ``CheckpointWatcher`` (``handoff``) — the
+    training→serving channel: atomic per-round snapshots in a watched
+    directory, hot-swapped between decode steps without touching in-flight
+    KV caches;
+  * ``generate_requests`` / ``run_open_loop`` (``traffic``) + ``summarize``
+    (``metrics``) — the open-loop Poisson harness behind the committed
+    ``BENCH_serve.json``.
+
+``python -m repro.serve`` runs a live demo or the bench sweep (see
+``cli``); ``federation.train_and_publish`` wires any registered arm into
+the publish side.
+"""
+
+from repro.serve.engine import ServeConfig, ServeEngine, batch_generate
+from repro.serve.handoff import (
+    CheckpointPublisher,
+    CheckpointWatcher,
+    checkpoint_path,
+    list_rounds,
+)
+from repro.serve.metrics import render_markdown, summarize
+from repro.serve.traffic import (
+    Request,
+    StepSample,
+    TraceResult,
+    TrafficConfig,
+    generate_requests,
+    run_open_loop,
+)
+
+__all__ = [
+    "CheckpointPublisher",
+    "CheckpointWatcher",
+    "Request",
+    "ServeConfig",
+    "ServeEngine",
+    "StepSample",
+    "TraceResult",
+    "TrafficConfig",
+    "batch_generate",
+    "checkpoint_path",
+    "generate_requests",
+    "list_rounds",
+    "render_markdown",
+    "run_open_loop",
+    "summarize",
+]

@@ -1,0 +1,144 @@
+"""Federation → serving glue: train a real transformer arm, publish rounds.
+
+The serving tier consumes checkpoints through the ``on_round`` seam that
+every backend honours (``repro.arms.backends.RunSetup.on_round``); this
+module supplies the three pieces a live demo or CI job needs:
+
+  * ``transformer_model`` — wraps the ``repro.models.transformer`` stack as
+    the functional ``arms.Model`` triple, so ANY registered arm (decaph,
+    fl, scaffold, gossip, ...) can train it unchanged;
+  * ``token_silos`` — synthetic per-hospital next-token corpora (each silo
+    draws from its own biased token distribution, the language-model
+    analogue of the paper's non-IID hospital shards);
+  * ``train_and_publish`` — ``arms.run(...)`` with a
+    ``CheckpointPublisher.publish`` wired to ``on_round``, so a watcher on
+    the publish directory sees round-N params the moment round N commits.
+
+SecAgg defaults OFF here: the fixed-point encode of a transformer's
+parameter tree is orders of magnitude heavier than the paper's MLP and
+adds nothing to the handoff being exercised.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.arms as arms
+from repro.models import transformer as tf
+from repro.serve.handoff import CheckpointPublisher
+
+__all__ = ["transformer_model", "token_silos", "train_and_publish"]
+
+
+def transformer_model(model_cfg) -> arms.Model:
+    """The transformer stack as an ``arms.Model`` (per-example loss).
+
+    Arms call ``loss_fn(params, ex)`` under ``vmap`` with ``ex = {"x", "y"}``
+    one example per call: ``x`` is a token sequence ``[S] int32``, ``y`` the
+    shifted labels (``-1`` = masked).  Padded rows are zero-weighted by the
+    arm's mask, so the all-zeros pad examples never contribute.
+    """
+
+    def init_fn(key):
+        return tf.init(model_cfg, key)
+
+    def loss_fn(params, ex):
+        batch = {
+            "tokens": ex["x"][None].astype(jnp.int32),
+            "labels": ex["y"][None].astype(jnp.int32),
+        }
+        return tf.loss_fn(model_cfg, params, batch)
+
+    def predict_fn(params, x):
+        logits, _aux = tf.forward(
+            model_cfg, params, {"tokens": x.astype(jnp.int32)}
+        )
+        return jnp.argmax(logits[:, -1], axis=-1)
+
+    return arms.Model(init_fn, loss_fn, predict_fn)
+
+
+def token_silos(
+    model_cfg,
+    *,
+    hospitals: int,
+    n_per: int,
+    seq_len: int,
+    seed: int = 0,
+    skew: float = 2.0,
+) -> list[arms.Participant]:
+    """Synthetic non-IID next-token shards, one per hospital.
+
+    Each silo samples from its own Zipf-tilted token distribution (silo h
+    permutes the vocab differently, ``skew`` controls how peaked), so
+    federated training has real cross-silo heterogeneity to average over.
+    Labels are inputs shifted left with the final position masked (``-1``).
+    Do NOT run these through ``normalize_participants`` — token ids are
+    categorical, not features.
+    """
+    rng = np.random.default_rng(seed)
+    vocab = model_cfg.vocab_size
+    base = 1.0 / np.arange(1, vocab + 1) ** skew
+    silos = []
+    for h in range(hospitals):
+        perm = rng.permutation(vocab)
+        probs = base[perm] / base.sum()
+        x = rng.choice(vocab, size=(n_per, seq_len), p=probs).astype(np.int32)
+        y = np.full_like(x, -1)
+        y[:, :-1] = x[:, 1:]
+        silos.append(arms.Participant(x, y))
+    return silos
+
+
+def train_and_publish(
+    arm: str,
+    model_cfg,
+    publish_dir: str,
+    *,
+    rounds: int,
+    hospitals: int = 4,
+    n_per: int = 32,
+    seq_len: int = 16,
+    batch_size: int = 16,
+    lr: float = 0.05,
+    seed: int = 0,
+    backend: str = "ideal",
+    keep_last: int | None = None,
+    pace_s: float = 0.0,
+    silos: Sequence[arms.Participant] | None = None,
+    **run_kwargs,
+):
+    """Run ``arm`` on ``backend`` and publish every completed round.
+
+    Returns ``(report, publisher)``; ``publisher.published`` lists the
+    published round indices in order.  A ``CheckpointWatcher`` pointed at
+    ``publish_dir`` (typically in the serving process) picks each one up on
+    its next poll.  ``pace_s`` sleeps after each publish — at smoke scale a
+    round completes in milliseconds, so pacing stands in for the real
+    cross-hospital round cadence and lets a concurrent serving tier observe
+    consecutive rounds instead of only the last.
+    """
+    model = transformer_model(model_cfg)
+    if silos is None:
+        silos = token_silos(model_cfg, hospitals=hospitals, n_per=n_per,
+                            seq_len=seq_len, seed=seed)
+    publisher = CheckpointPublisher(
+        publish_dir, keep_last=keep_last,
+        metadata={"arm": arm, "arch": model_cfg.name},
+    )
+    cfg = arms.ArmConfig(
+        rounds=rounds, batch_size=batch_size, lr=lr, seed=seed,
+        use_secagg=False,
+    )
+    on_round = publisher.publish
+    if pace_s > 0:
+        def on_round(t, params):  # noqa: F811 — paced variant
+            publisher.publish(t, params)
+            time.sleep(pace_s)
+    report = arms.run(arm, model, list(silos), cfg, backend=backend,
+                      on_round=on_round, **run_kwargs)
+    return report, publisher

@@ -1,0 +1,140 @@
+"""repro.checkpoint round-trip + corruption contract.
+
+The serving handoff channel (``repro.serve.handoff``) leans on two promises
+here: a rename-atomic write (a reader never sees a torn file under the
+final name) and ``CorruptCheckpointError`` on anything that IS torn (so the
+watcher can skip-and-retry instead of dying).  These tests pin both, plus
+exact round-trips for the tree shapes that actually travel the channel —
+transformer parameter trees and KV-cache-shaped nested structures.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CorruptCheckpointError,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+
+def _assert_trees_equal(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for xa, xb in zip(la, lb):
+        xa, xb = np.asarray(xa), np.asarray(xb)
+        assert xa.dtype == xb.dtype
+        assert xa.shape == xb.shape
+        np.testing.assert_array_equal(xa, xb)
+
+
+def test_roundtrip_params_tree(tmp_path):
+    tree = {
+        "group0": {
+            "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": jnp.ones((4,), jnp.float32),
+        },
+        "head": jnp.full((2, 2), -1.5, jnp.bfloat16),
+    }
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, tree, step=7, metadata={"arm": "fl"})
+    got, step, meta = load_checkpoint(path)
+    assert step == 7
+    assert meta["arm"] == "fl"
+    _assert_trees_equal(tree, got)
+
+
+def test_roundtrip_kv_cache_shaped_tree(tmp_path):
+    # the serving engine's cache: nested dicts with tuples of
+    # mixed-dtype arrays carrying a stacked-layer axis 0 and batch axis 1
+    cache = {
+        "group0": {
+            "attn": (
+                jnp.zeros((2, 3, 16, 4, 8), jnp.bfloat16),   # k
+                jnp.ones((2, 3, 16, 4, 8), jnp.bfloat16),    # v
+            ),
+            "pos": jnp.arange(3, dtype=jnp.int32),
+        },
+        "group1": {
+            "conv": jnp.full((2, 3, 4, 32), 0.25, jnp.float32),
+            "ssm": [jnp.zeros((2, 3, 8, 8), jnp.float32)],
+        },
+    }
+    path = str(tmp_path / "cache.msgpack")
+    save_checkpoint(path, cache, step=0)
+    got, _, _ = load_checkpoint(path)
+    _assert_trees_equal(cache, got)
+    # container kinds survive: tuples stay tuples, lists stay lists
+    assert isinstance(got["group0"]["attn"], tuple)
+    assert isinstance(got["group1"]["ssm"], list)
+
+
+def test_missing_file_raises_file_not_found(tmp_path):
+    # FileNotFoundError passes through UNwrapped: the watcher treats "not
+    # there yet" (a just-pruned round) differently from "there but broken"
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path / "nope.msgpack"))
+
+
+def test_truncated_file_is_corrupt(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, {"w": jnp.ones((64, 64), jnp.float32)}, step=3)
+    raw = open(path, "rb").read()
+    torn = str(tmp_path / "torn.msgpack")
+    with open(torn, "wb") as f:
+        f.write(raw[: len(raw) // 2])
+    with pytest.raises(CorruptCheckpointError):
+        load_checkpoint(torn)
+
+
+def test_garbage_file_is_corrupt(tmp_path):
+    path = str(tmp_path / "junk.msgpack")
+    with open(path, "wb") as f:
+        f.write(b"\xde\xad\xbe\xef not a checkpoint")
+    with pytest.raises(CorruptCheckpointError):
+        load_checkpoint(path)
+
+
+def test_valid_msgpack_wrong_payload_is_corrupt(tmp_path):
+    import msgpack
+
+    path = str(tmp_path / "notckpt.msgpack")
+    with open(path, "wb") as f:
+        f.write(msgpack.packb({"hello": "world"}, use_bin_type=True))
+    with pytest.raises(CorruptCheckpointError):
+        load_checkpoint(path)
+
+
+def test_mismatched_array_bytes_are_corrupt(tmp_path):
+    import msgpack
+
+    path = str(tmp_path / "ok.msgpack")
+    save_checkpoint(path, {"w": jnp.ones((4, 4), jnp.float32)}, step=0)
+    payload = msgpack.unpackb(open(path, "rb").read(), raw=False)
+    # declared shape no longer matches the byte count
+    payload["tree"]["__map__"]["w"]["shape"] = [5, 5]
+    bad = str(tmp_path / "bad.msgpack")
+    with open(bad, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    with pytest.raises(CorruptCheckpointError):
+        load_checkpoint(bad)
+
+
+def test_atomic_write_leaves_no_temp_droppings(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, {"w": jnp.zeros((2,), jnp.float32)}, step=1)
+    assert sorted(os.listdir(tmp_path)) == ["ckpt.msgpack"]
+
+
+def test_overwrite_is_atomic_replacement(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, {"w": jnp.zeros((2,), jnp.float32)}, step=1)
+    save_checkpoint(path, {"w": jnp.ones((2,), jnp.float32)}, step=2)
+    got, step, _ = load_checkpoint(path)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.ones(2))
