@@ -50,6 +50,7 @@ DEFAULT_BACKEND = "ideal"
 _BACKEND_MODULES = (
     "repro.arms.runners",       # ideal + sim
     "repro.launch.federated",   # shard (SPMD mesh execution)
+    "repro.population.backend",  # population (trace-then-solve cross-device)
 )
 
 
@@ -70,6 +71,11 @@ class BackendInfo:
       fused_only: refuses arms without a fused hot path (and refuses
         ``fused_rounds=False`` configs): the backend has no per-participant
         loop to fall back to.
+      supports_subsampling: honours ``participation_rate`` (Poisson cohort
+        subsampling, q < 1).  Backends without it run every hospital every
+        round, so a q < 1 config would make the arm's accountant claim an
+        amplified ε the execution never delivered — validation refuses the
+        pair instead.
       bit_exact_group: backends sharing a non-empty group value promise
         bit-identical training trajectories for the same (arm, config)
         under ideal conditions; equivalence tests pair backends by group.
@@ -84,6 +90,7 @@ class BackendInfo:
     supports_secagg: bool = True
     supports_sim_time: bool = False
     fused_only: bool = False
+    supports_subsampling: bool = False
     bit_exact_group: str = ""
     device_requirements: str = ""
     description: str = ""
@@ -199,9 +206,19 @@ def compatibility_error(
     *,
     use_secagg: bool,
     fused_rounds: bool = True,
+    participation_rate: float = 1.0,
 ) -> str | None:
     """The rule that rejects this (arm, backend, config) — or None if OK."""
     arm_name = getattr(arm_cls, "name", arm_cls.__name__)
+    if participation_rate < 1.0 and not info.supports_subsampling:
+        # Running everyone while the accountant composes at the subsampled
+        # rate would understate ε — a silent privacy violation, not a knob.
+        return (
+            f"participation_rate={participation_rate} requires Poisson "
+            f"cohort subsampling but backend {info.name!r} runs every "
+            f"hospital every round; its ε accounting would be wrong "
+            f"(use a backend with supports_subsampling)"
+        )
     if fused_rounds and not info.supports_fused:
         return (
             f"backend {info.name!r} cannot execute fused cohort programs; "
@@ -233,7 +250,9 @@ def compatibility_error(
 def validate_run(arm_cls: type, info: BackendInfo, cfg: "ArmConfig") -> None:
     """Loud pre-flight check used by ``repro.arms.run`` before any compute."""
     err = compatibility_error(
-        arm_cls, info, use_secagg=cfg.use_secagg, fused_rounds=cfg.fused_rounds
+        arm_cls, info, use_secagg=cfg.use_secagg,
+        fused_rounds=cfg.fused_rounds,
+        participation_rate=getattr(cfg, "participation_rate", 1.0),
     )
     if err is not None:
         raise ValueError(err)
@@ -245,6 +264,7 @@ def validate_scenario(
     backend: str,
     use_secagg: bool,
     needs_sim_time: bool,
+    participation_rate: float = 1.0,
 ) -> None:
     """Capability-gate a ``ScenarioSpec`` at construction time.
 
@@ -271,6 +291,9 @@ def validate_scenario(
         arm_cls = arms_lib.get(arm)
     except KeyError:
         return  # executor fails loudly on unknown arms (with the arm list)
-    err = compatibility_error(arm_cls, info, use_secagg=use_secagg)
+    err = compatibility_error(
+        arm_cls, info, use_secagg=use_secagg,
+        participation_rate=participation_rate,
+    )
     if err is not None:
         raise ValueError(err)

@@ -107,6 +107,8 @@ class ArmConfig:
     fedprox_mu: float = 0.1        # proximal-term weight for "fedprox"
     leader_strategy: str = "uniform"
     fused_rounds: bool = True      # cohort-batched round step (DESIGN.md §7)
+    participation_rate: float = 1.0  # Poisson cohort subsampling q (population
+                                     # backend; 1.0 = everyone, every round)
     seed: int = 0
     eval_every: int = 0            # 0 = never
     max_pad_batch: int | None = None  # static padded per-silo batch (jit shapes)
@@ -294,6 +296,14 @@ class RoundArm(Arm):
     fused_capable = False         # overrides fused_round (backend capability
                                   # negotiation: fused-only backends refuse
                                   # arms without it)
+    distributed_noise = False     # DP noise rides per-participant shares, so
+                                  # a lost upload under-noises the sum (the
+                                  # backend owes a top-up — DESIGN.md §10)
+
+    def round_cost(self, i: int) -> int:
+        """Expected examples participant ``i`` processes in one round (the
+        trace phase's compute-time model; actual draws happen at solve)."""
+        return min(self.cfg.batch_size, len(self.participants[i]))
 
     # --- cohort / schedule ---------------------------------------------------
 

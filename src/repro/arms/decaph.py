@@ -43,6 +43,7 @@ class DeCaPHArm(RoundArm):
     void_logs = True            # an empty Poisson round is logged as NaN
     topology_kind = "full"      # any participant can facilitate
     fused_capable = True
+    distributed_noise = True    # per-participant noise shares sum to (Cσ)²
 
     def __init__(self, model: Model, participants: Sequence[Participant],
                  cfg: ArmConfig) -> None:
@@ -53,8 +54,13 @@ class DeCaPHArm(RoundArm):
         self.leaders = leader_schedule(
             self.h, cfg.rounds, seed=cfg.seed, strategy=cfg.leader_strategy
         )
+        # With cohort subsampling (participation_rate q < 1) an example's
+        # marginal inclusion probability per round is q * rate — hospital
+        # Poisson at q, then example Poisson at rate inside sampled
+        # hospitals — so the accountant composes at that product (see
+        # population.sampler for why this stays an upper bound).
         self.acct = RDPAccountant(
-            sampling_rate=self.rate,
+            sampling_rate=self.rate * cfg.participation_rate,
             noise_multiplier=cfg.dp.noise_multiplier,
             delta=cfg.dp.delta,
         )
@@ -105,7 +111,8 @@ class DeCaPHArm(RoundArm):
         return min(
             self.cfg.rounds,
             steps_for_epsilon(
-                self.rate, self.cfg.dp.noise_multiplier,
+                self.rate * self.cfg.participation_rate,
+                self.cfg.dp.noise_multiplier,
                 self.cfg.epsilon_budget, self.cfg.dp.delta,
                 max_steps=self.cfg.rounds + 1,
             ),
@@ -117,6 +124,11 @@ class DeCaPHArm(RoundArm):
         if self.cfg.use_secagg:
             return max(2, self.cfg.secagg_threshold or 2), None
         return 2, None
+
+    def round_cost(self, i: int) -> int:
+        # expected Poisson draw, not the full batch: at H=1000 a hospital
+        # contributes rate * |shard| examples per round in expectation
+        return max(1, int(round(self.rate * len(self.participants[i]))))
 
     def facilitator(self, t: int, active: Sequence[int]) -> int:
         leader = int(self.leaders[t])

@@ -43,6 +43,8 @@ class SimTiming:
     recoveries: int = 0           # SecAgg Shamir recoveries performed
     lost_rounds: int = 0          # rounds voided (dead facilitator, empty batch)
     events: int = 0               # engine events processed
+    noise_topups: int = 0         # rounds whose DP noise was topped up after
+                                  # losing distributed noise shares mid-round
 
 
 @dataclasses.dataclass
@@ -93,6 +95,10 @@ class RunReport:
     @property
     def events(self) -> int:
         return self.timing.events if self.timing else 0
+
+    @property
+    def noise_topups(self) -> int:
+        return self.timing.noise_topups if self.timing else 0
 
     def mean_loss(self) -> float:
         """Mean of the logged (finite) round losses; NaN when none exist."""

@@ -40,6 +40,7 @@ from repro.arms.base import (
     tree_sum,
 )
 from repro.arms.results import RoundLog, RunReport, SimTiming
+from repro.core import dp as dp_lib
 from repro.core.secagg import (
     DropoutRobustSession,
     SecAggConfig,
@@ -124,8 +125,10 @@ class _IdealServices(AggregationServices):
 class _SimServices(AggregationServices):
     """Sums over what actually arrived; SecAgg over gathered ciphertexts."""
 
-    def __init__(self, session, uploads: dict[int, Any] | None) -> None:
+    def __init__(self, session, uploads: dict[int, Any] | None,
+                 topup: PyTree | None = None) -> None:
         self._session, self._uploads = session, uploads
+        self._topup = topup
 
     def sum_sizes(self, sizes: Sequence[int]) -> int:
         return int(sum(sizes))
@@ -134,8 +137,15 @@ class _SimServices(AggregationServices):
         if self._session is not None:
             # Shamir mask recovery for dropped participants happens inside
             # the session; the backend already charged its wire/time cost.
-            return self._session.aggregate(self._uploads)
-        return tree_sum([payloads[i] for i in sorted(payloads)])
+            total = self._session.aggregate(self._uploads)
+        else:
+            total = tree_sum([payloads[i] for i in sorted(payloads)])
+        if self._topup is not None:
+            # dropped participants took their noise shares with them: the
+            # recovered sum is under-noised relative to the accountant's
+            # calibration; the backend owes the difference (DESIGN.md §10)
+            total = tree_sum([total, self._topup])
+        return total
 
 
 # -- idealized backend -------------------------------------------------------
@@ -490,9 +500,10 @@ class SimRunner:
         model_bytes = tree_bytes(params, cfg.bytes_per_param)
         engine = self._engine()
         wire = 0.0
-        dropouts = recoveries = lost = completed = 0
+        dropouts = recoveries = lost = completed = topups = 0
         logs: list[RoundLog] = []
         minimum, require = arm.quorum()
+        topup_base = jax.random.key(cfg.seed * 31 + dp_lib.TOPUP_SALT)
 
         # planned_rounds() pre-caps for an epsilon budget exactly like the
         # idealized backend — without it the sim side would overshoot the
@@ -588,9 +599,20 @@ class SimRunner:
                     )["recovery_bytes"]
                     dropouts += self._gather_shares(engine, dst, delivered)
 
+            topup = None
+            if dropped_mid and arm.distributed_noise:
+                # every active participant noised its share for a cohort of
+                # len(active); the dropped shares never arrived
+                topup = dp_lib.tree_topup_noise(
+                    params, jax.random.fold_in(topup_base, t),
+                    clip_norm=cfg.dp.clip_norm,
+                    noise_multiplier=cfg.dp.noise_multiplier,
+                    missing=len(dropped_mid), n_shares=len(active),
+                )
+                topups += 1
             dl_contribs = {i: contribs[i] for i in delivered}
             outcome = arm.aggregate(
-                params, dl_contribs, _SimServices(session, uploads)
+                params, dl_contribs, _SimServices(session, uploads, topup)
             )
             if not outcome.stepped:
                 lost += 1  # e.g. empty Poisson draw across the cohort
@@ -618,6 +640,7 @@ class SimRunner:
                 wall_clock=engine.now, bytes_on_wire=wire,
                 dropout_events=dropouts, recoveries=recoveries,
                 lost_rounds=lost, events=engine.processed,
+                noise_topups=topups,
             ),
         )
 

@@ -183,6 +183,48 @@ def tree_add_noise(tree: PyTree, key: jax.Array, *, clip_norm: float,
     return _tree_add(tree, nz)
 
 
+# Base-key salt for dropout noise top-ups: a key stream of its own, so a
+# top-up draw can never collide with any participant's fold_in-derived
+# noise-share keys (arms fold small salts like 17 + t).
+TOPUP_SALT = 1_000_003
+
+
+def tree_topup_noise(
+    template: PyTree,
+    key: jax.Array,
+    *,
+    clip_norm: float,
+    noise_multiplier: float,
+    missing: int,
+    n_shares: int,
+    dtype=jnp.float32,
+) -> PyTree:
+    """Conservative noise top-up when ``missing`` of ``n_shares`` noise
+    shares were lost mid-round.
+
+    Each participant's share carries N(0, (C sigma)^2 / n); losing
+    ``missing`` of them leaves the delivered sum with variance
+    (C sigma)^2 * (n - missing) / n — silently *under*-noised relative to
+    the calibration the accountant assumed.  Adding an independent
+    N(0, (C sigma)^2 * missing / n) draw restores exactly the full-cohort
+    variance (Gaussian variances add), so the mechanism's privacy claim
+    survives dropouts at the cost of slightly more noise than a
+    re-calibrated fresh round would need — the conservative direction.
+    """
+    if not 0 < missing <= n_shares:
+        raise ValueError(
+            f"need 0 < missing <= n_shares (got {missing}/{n_shares})"
+        )
+    std = clip_norm * noise_multiplier * jnp.sqrt(missing / float(n_shares))
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    keys = jax.random.split(key, len(leaves))
+    noise = [
+        jax.random.normal(k, x.shape, dtype) * std
+        for k, x in zip(keys, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, noise)
+
+
 def dp_aggregate_gradients(
     clipped_sums: list[PyTree],
     noise_keys: list[jax.Array],

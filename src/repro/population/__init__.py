@@ -1,0 +1,41 @@
+"""repro.population — trace-then-solve cross-device engine (DESIGN.md §10).
+
+Everything before this subsystem was cross-silo: the discrete-event engine
+in ``repro.sim`` interleaves event scheduling with model compute, welding
+"one simulated hospital" to "one in-process compute step", which caps H at
+a few dozen.  This package decouples them with the coordinator/broker/worker
+split of the decentralized-learning-simulator exemplar (SNIPPETS.md §3):
+
+  * **trace** (``repro.population.trace``) — a discrete-event pass with NO
+    model compute.  It consumes per-hospital availability/throughput traces,
+    a sparse topology (k-regular / small-world at H=1000, link churn) and a
+    first-class Poisson **cohort sampler** (``repro.population.sampler``),
+    and emits a timestamped, content-addressed **compute graph**
+    (``repro.population.graph``): train/aggregate/eval nodes with
+    data-dependency edges.  Byte-identical for a fixed seed — the
+    determinism contract the solve cache relies on.
+  * **solve** (``repro.population.solve``) — topologically schedules that
+    graph, executing each round's thousands of per-client train leaves as
+    ONE fused cohort dispatch (the §7 round-step), with a ``SolveReport``
+    separating simulated time from host wall time.
+
+``repro.population.backend`` registers the pair as the ``population``
+backend (fused-only, no per-event SecAgg service: SecAgg cost is modeled at
+the aggregate level with the trace's sampled dropouts feeding the existing
+recovery-byte math).  ``PopulationSpec`` (``repro.population.spec``)
+generates 1000-hospital node/topology traces from distributions, consumable
+from ``ScenarioSpec.population``; ``python -m repro.population`` is the CLI.
+"""
+
+from __future__ import annotations
+
+from repro.population.graph import ComputeGraph, TraceNode
+from repro.population.sampler import CohortSampler
+from repro.population.spec import PopulationSpec
+
+__all__ = [
+    "CohortSampler",
+    "ComputeGraph",
+    "PopulationSpec",
+    "TraceNode",
+]

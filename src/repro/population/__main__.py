@@ -1,0 +1,3 @@
+from repro.population.cli import main
+
+raise SystemExit(main())

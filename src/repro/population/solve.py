@@ -1,0 +1,230 @@
+"""The solve phase: topologically execute the traced compute graph.
+
+Where the trace phase decided *when* everything happens, the solver decides
+nothing — it walks the trace's rounds in topological order (the graph's
+aggregate chain) and executes each round's thousands of per-client train
+leaves as ONE fused cohort dispatch (``RoundArm.fused_round``, DESIGN.md
+§7), so H=1000 costs one program launch per round instead of 1000.
+
+Randomness contract (DESIGN.md §10): the solver owns one host
+``np.random.Generator`` seeded from the config, consumed strictly in
+(executed round, ascending participant index) order.  Rounds the trace
+voided *before* compute (below quorum, dead hub) consume nothing; with
+``q=1`` and an ideal trace the stream is consumed exactly as the idealized
+backend would, which is what makes ``population`` bit-identical to
+``ideal`` there (pinned by ``tests/test_population.py``).
+
+Delivery is replayed from the trace: when every sampled upload arrived the
+round stays entirely on device (``need_payloads=False`` + the in-jit
+reduced sum); when the trace dropped uploads mid-round the solver pulls
+per-participant payloads, sums the delivered subset, and — for arms whose
+noise rides distributed shares (``distributed_noise``) — adds the
+conservative Gaussian top-up that restores the full-cohort noise
+calibration (the same ``core.dp.tree_topup_noise`` the sim backend applies
+after SecAgg recovery).
+
+``SolveReport`` separates the two clocks: simulated seconds come from the
+trace, host wall seconds from executing the solve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.arms.base import (
+    AggregationServices,
+    Contribution,
+    RoundArm,
+    tree_sum,
+)
+from repro.arms.results import RoundLog
+from repro.population.trace import Trace
+
+PyTree = Any
+
+
+class _PopulationServices(AggregationServices):
+    """Aggregate-level services: plain sums + optional noise top-up."""
+
+    def __init__(self, fused_reduced: PyTree | None,
+                 cover: frozenset[int],
+                 topup: PyTree | None = None) -> None:
+        self.fused_reduced = fused_reduced
+        self._cover = cover
+        self._topup = topup
+
+    def sum_sizes(self, sizes: Sequence[int]) -> int:
+        return int(sum(sizes))
+
+    def sum_payloads(self, payloads: Mapping[int, PyTree]) -> PyTree:
+        if self.fused_reduced is not None and set(payloads) == self._cover:
+            return self.fused_reduced
+        total = tree_sum([payloads[i] for i in sorted(payloads)])
+        if self._topup is not None:
+            total = tree_sum([total, self._topup])
+        return total
+
+
+@dataclasses.dataclass
+class SolveReport:
+    """What the solve phase did, with simulated vs host time separated."""
+
+    simulated_seconds: float      # the trace's clock (systems story)
+    wall_seconds: float           # host time spent executing the solve
+    rounds_planned: int
+    rounds_completed: int
+    lost_rounds: int              # trace-lost + solve-lost (empty draws)
+    bytes_on_wire: float
+    dropout_events: int
+    recoveries: int
+    noise_topups: int
+    graph_nodes: int
+    graph_hash: str
+    empirical_q: float
+    mean_cohort: float
+    evals: list[tuple[int, float]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """Training outputs + the report (the backend splices these into a
+    ``RunReport``)."""
+
+    params: PyTree
+    logs: list[RoundLog]
+    epsilon: float
+    report: SolveReport
+
+
+def solve(
+    trace: Trace,
+    arm: RoundArm,
+    *,
+    on_round: Callable[[int, PyTree], None] | None = None,
+) -> SolveResult:
+    """Execute the traced rounds against ``arm``'s fused round-step."""
+    import jax  # deferred: the trace phase never pays this import
+
+    cfg = arm.cfg
+    t0 = time.time()
+    params = arm.init_params()
+    from repro.core import dp as dp_lib
+
+    rng = np.random.default_rng(cfg.seed)
+    topup_base = jax.random.key(cfg.seed * 31 + dp_lib.TOPUP_SALT)
+    logs: list[RoundLog] = []
+    completed = 0
+    solve_lost = 0
+    noise_topups = 0
+    evals: list[tuple[int, float]] = []
+    eval_rounds = {n.round for n in trace.graph.nodes if n.kind == "eval"}
+
+    for plan in trace.rounds:
+        if plan.lost:
+            continue  # voided pre-compute: no rng consumed (see module doc)
+        t = plan.t
+        # the arm may veto participants beyond availability (e.g. a local
+        # privacy budget exhausted mid-run) — the trace cannot know that
+        active = [i for i in plan.cohort if arm.participates(i, t)]
+        if not active:
+            if arm.empty_break:
+                break
+            solve_lost += 1
+            continue
+        delivered_set = set(plan.delivered)
+        delivered = [i for i in active if i in delivered_set]
+        missing = len(active) - len(delivered)
+        if not delivered:
+            solve_lost += 1
+            continue
+
+        if missing == 0:
+            # whole cohort delivered: payloads stay on device, the in-jit
+            # reduced sum serves the aggregation
+            fr = arm.fused_round(params, active, t, rng, len(active),
+                                 need_payloads=False, need_reduced=True)
+        else:
+            fr = arm.fused_round(params, active, t, rng, len(active),
+                                 need_payloads=True, need_reduced=False)
+        if fr is None:
+            raise RuntimeError(
+                f"arm {arm.name!r} has no fused round-step; the population "
+                "backend is fused-only (validation should have caught this)"
+            )
+        contribs, reduced = fr
+
+        topup = None
+        if missing and getattr(arm, "distributed_noise", False):
+            # each of the n_shares participants added N(0, (Cσ)²/n) — with
+            # ``missing`` shares lost the sum is under-noised; restore the
+            # full calibration conservatively (core.dp.tree_topup_noise)
+            topup = dp_lib.tree_topup_noise(
+                params, jax.random.fold_in(topup_base, t),
+                clip_norm=cfg.dp.clip_norm,
+                noise_multiplier=cfg.dp.noise_multiplier,
+                missing=missing, n_shares=len(active),
+            )
+            noise_topups += 1
+
+        services = _PopulationServices(
+            fused_reduced=reduced, cover=frozenset(delivered), topup=topup,
+        )
+        outcome = arm.aggregate(
+            params, {i: contribs[i] for i in delivered}, services
+        )
+        if not outcome.stepped:
+            solve_lost += 1  # e.g. empty Poisson draw across the cohort
+            if arm.void_logs:
+                logs.append(RoundLog(t, plan.dst, float("nan"),
+                                     arm.epsilon(), 0))
+            continue
+        params = outcome.params
+        arm.account()
+        completed += 1
+        logs.append(RoundLog(t, plan.dst, outcome.loss, arm.epsilon(),
+                             outcome.aggregate_batch))
+        if t in eval_rounds:
+            evals.append((t, _eval_loss(arm, params, plan.dst)))
+        if on_round is not None:
+            on_round(t, params)
+        if arm.should_stop():
+            break
+
+    report = SolveReport(
+        simulated_seconds=trace.wall_clock,
+        wall_seconds=time.time() - t0,
+        rounds_planned=len(trace.rounds),
+        rounds_completed=completed,
+        lost_rounds=trace.lost_rounds + solve_lost,
+        bytes_on_wire=trace.bytes_on_wire,
+        dropout_events=trace.dropout_events,
+        recoveries=trace.recoveries,
+        noise_topups=noise_topups,
+        graph_nodes=len(trace.graph),
+        graph_hash=trace.graph.graph_hash(),
+        empirical_q=trace.empirical_q,
+        mean_cohort=trace.mean_cohort,
+        evals=evals,
+    )
+    return SolveResult(params=params, logs=logs, epsilon=arm.epsilon(),
+                       report=report)
+
+
+def _eval_loss(arm: RoundArm, params: PyTree, dst: int,
+               probe: int = 64) -> float:
+    """Eval-node execution: mean loss over the facilitator's probe batch."""
+    import jax
+    import jax.numpy as jnp
+
+    part = arm.participants[dst % len(arm.participants)]
+    n = min(probe, len(part))
+    if n == 0:
+        return float("nan")
+    losses = jax.vmap(
+        lambda x, y: arm.model.loss_fn(params, {"x": x, "y": y})
+    )(jnp.asarray(part.x[:n]), jnp.asarray(part.y[:n]))
+    return float(jnp.mean(losses))

@@ -79,12 +79,24 @@ def build_scenario(spec: ScenarioSpec):
         seed=spec.seed, use_secagg=spec.use_secagg,
         fl_local_steps=spec.fl_local_steps, fedprox_mu=spec.fedprox_mu,
         epsilon_budget=spec.epsilon_budget,
+        participation_rate=spec.participation_rate,
         dp=DPConfig(clip_norm=spec.clip_norm,
                     noise_multiplier=spec.noise_multiplier,
                     microbatch_size=spec.microbatch_size),
     )
     if not backend_info.supports_sim_time:
         return model, silos, cfg, None, None
+    if spec.population is not None:
+        # distributional cell: materialise the node/topology traces from the
+        # population description (deterministic in spec.seed)
+        from repro.population.spec import PopulationSpec
+
+        pop = PopulationSpec.from_dict(
+            {"hospitals": spec.hospitals, "seed": spec.seed,
+             **spec.population}
+        )
+        return (model, silos, cfg, nodes_from_trace(pop.build_nodes()),
+                Topology.from_trace(pop.build_topology()))
     nodes = nodes_from_trace(presets_lib.default_nodes(spec))
     if spec.topology is not None:
         topo_spec = dict(spec.topology)
@@ -140,6 +152,7 @@ def run_spec(spec: ScenarioSpec) -> dict:
         "recoveries": int(rep.recoveries),
         "lost_rounds": int(rep.lost_rounds),
         "events": int(rep.events),
+        "noise_topups": int(rep.noise_topups),
         "host_seconds": host_seconds,
     }
 

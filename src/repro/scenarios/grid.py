@@ -156,12 +156,43 @@ def backend_matrix() -> SweepGrid:
     )
 
 
+def population_scaling() -> SweepGrid:
+    """Cross-device scaling: fused arms x H in {50, 200, 1000} x 3 seeds on
+    the population backend (k-regular overlay, 10% Poisson participation,
+    5% flaky hospitals).  Extends the power-law fits to H=1000 with per-cell
+    confidence intervals from the seed axis; the trace phase costs timestamp
+    arithmetic only, so even the H=1000 cells run on a laptop-class host.
+    """
+    base = ScenarioSpec(
+        name="population-scaling", task="gemini", model_size="small",
+        features=16, examples=6000, rounds=5, batch_size=64, lr=0.4,
+        hospitals=50,  # >= degree+1 so the base spec itself validates
+        backend="population", use_secagg=False, participation_rate=0.1,
+        population={
+            "topology": "k_regular", "degree": 8,
+            "throughput_median": 400.0, "throughput_sigma": 0.5,
+            "flaky_fraction": 0.05, "mean_uptime": 120.0,
+            "mean_downtime": 15.0,
+        },
+    )
+    return SweepGrid(
+        "population-scaling",
+        base,
+        {
+            "arm": ["decaph", "fl"],
+            "hospitals": [50, 200, 1000],
+            "seed": [0, 1, 2],
+        },
+    )
+
+
 SWEEPS: dict[str, Callable[[], SweepGrid]] = {
     "capacity-mini": capacity_mini,
     "capacity": capacity,
     "model-scaling": model_scaling,
     "smoke-2x2": smoke_2x2,
     "backend-matrix": backend_matrix,
+    "population-scaling": population_scaling,
 }
 
 

@@ -46,6 +46,58 @@ def fit_power_law(xs: Sequence[float], ys: Sequence[float]) -> dict | None:
     return {"exponent": b, "coefficient": math.exp(a), "r2": r2, "points": n}
 
 
+# Metrics averaged (with a CI) across a multi-seed axis; everything else in
+# a seed group must agree or the group is not a seed group.
+_SEED_METRICS = ("epsilon", "accuracy", "mean_loss", "wall_clock",
+                 "bytes_on_wire", "rounds_completed", "recoveries",
+                 "lost_rounds", "dropout_events", "host_seconds")
+_GROUP_KEYS = ("task", "arm", "backend", "hospitals", "model_size",
+               "model_params")
+
+
+def aggregate_seeds(cells: Sequence[dict]) -> list[dict]:
+    """Collapse a sweep's seed axis: one row per (task, arm, backend, H,
+    model size), metrics averaged with a 95% normal CI half-width
+    (``<metric>_ci`` = 1.96 * sd / sqrt(n); omitted for singleton groups).
+
+    Cells missing a group key (foreign payloads) pass through untouched.
+    Output rows carry ``seeds`` (the group size); power-law fits run over
+    these group means, which for singleton groups reproduces the ungrouped
+    fit exactly.
+    """
+    groups: dict[tuple, list[dict]] = {}
+    passthrough: list[dict] = []
+    for c in cells:
+        if any(k not in c for k in _GROUP_KEYS):
+            passthrough.append(dict(c))
+            continue
+        groups.setdefault(tuple(c[k] for k in _GROUP_KEYS), []).append(c)
+    out: list[dict] = []
+    for key, rows in groups.items():
+        row = dict(rows[0])
+        row["seeds"] = len(rows)
+        if len(rows) > 1:
+            # strip the seed-specific label; the group keys identify the row
+            row["name"] = "{}/{}".format(
+                rows[0].get("name", "").split("/")[0] or rows[0]["arm"],
+                ",".join(f"{k}={v}" for k, v in zip(_GROUP_KEYS, key)
+                         if k in ("arm", "hospitals", "model_size")),
+            )
+            for m in _SEED_METRICS:
+                vals = [r[m] for r in rows
+                        if isinstance(r.get(m), (int, float))]
+                if len(vals) != len(rows):
+                    continue  # a None (NaN mean_loss) voids the average
+                n = len(vals)
+                mean = sum(vals) / n
+                sd = math.sqrt(sum((v - mean) ** 2 for v in vals) / (n - 1))
+                row[m] = mean
+                row[m + "_ci"] = 1.96 * sd / math.sqrt(n)
+        out.append(row)
+    out.extend(passthrough)
+    return out
+
+
 def _fit_by_arm(cells: list[dict], x_key: str, y_key: str) -> dict[str, dict]:
     arms = sorted({c["arm"] for c in cells})
     out = {}
@@ -63,9 +115,12 @@ def scaling_laws(cells: Sequence[dict]) -> dict:
 
     Systems laws fit over cells that carried a simulated-time story (any
     backend whose runs advanced a simulated clock — zero-traffic arms like
-    ``local`` still count), not a hardcoded backend name.
+    ``local`` still count), not a hardcoded backend name.  The seed axis is
+    collapsed first (``aggregate_seeds``): fits run over per-group means so
+    a sweep with 3 seeds per cell contributes one point per cell, not three
+    coincident ones that would overweight replicated configurations.
     """
-    sim = [c for c in cells if c.get("wall_clock", 0) > 0]
+    sim = [c for c in aggregate_seeds(cells) if c.get("wall_clock", 0) > 0]
     return {
         "wall_clock_vs_hospitals": _fit_by_arm(sim, "hospitals", "wall_clock"),
         "bytes_vs_hospitals": _fit_by_arm(sim, "hospitals", "bytes_on_wire"),
@@ -102,6 +157,27 @@ def markdown_report(sweep_name: str, cells: Sequence[dict],
                 f"{fit['points']} |"
             )
         lines.append("")
+    grouped = [g for g in aggregate_seeds(cells) if g.get("seeds", 1) > 1]
+    if grouped:
+        lines += ["## Seed groups (mean ± 95% CI)", "",
+                  "| group | arm | H | seeds | ε | utility | "
+                  "sim wall (s) | bytes |",
+                  "|---|---|---|---|---|---|---|---|"]
+
+        def pm(g: dict, m: str, fmt: str) -> str:
+            ci = g.get(m + "_ci")
+            base = format(g[m], fmt)
+            return base if ci is None else f"{base} ± {format(ci, fmt)}"
+
+        for g in grouped:
+            lines.append(
+                f"| {g['name']} | {g['arm']} | {g['hospitals']} | "
+                f"{g['seeds']} | {pm(g, 'epsilon', '.2f')} | "
+                f"{pm(g, 'accuracy', '.3f')} | "
+                f"{pm(g, 'wall_clock', '.3f')} | "
+                f"{pm(g, 'bytes_on_wire', '.3g')} |"
+            )
+        lines.append("")
     lines += ["## Cells", "",
               "| cell | arm | H | size | rounds | ε | utility | "
               "sim wall (s) | bytes | recov |",
@@ -124,6 +200,7 @@ def bench_payload(sweep_name: str, cells: Sequence[dict],
     return {
         "sweep": sweep_name,
         "cells": list(cells),
+        "seed_groups": aggregate_seeds(cells),
         "scaling_laws": laws if laws is not None else scaling_laws(cells),
         "generated_by": "python -m repro.scenarios",
     }

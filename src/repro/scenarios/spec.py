@@ -32,7 +32,7 @@ TASKS = ("gemini", "pancreas", "xray")
 MODEL_SIZES = ("small", "medium", "full")
 
 # bump when the semantics of a field change so stale entries never alias
-SPEC_SCHEMA = 1
+SPEC_SCHEMA = 2  # v2: participation_rate + population joined the key
 
 # label-only fields, excluded from the cache key
 _UNHASHED_FIELDS = ("name", "tags")
@@ -63,9 +63,14 @@ class ScenarioSpec:
     # arm knobs (ignored by arms that do not use them)
     fl_local_steps: int = 1
     fedprox_mu: float = 0.1
+    # cross-device (population backend): Poisson cohort subsampling rate q
+    participation_rate: float = 1.0
     # systems: explicit traces win over the derived defaults below
     nodes: list[dict] | None = None      # per-hospital trace dicts
     topology: dict | None = None         # Topology.from_trace dict (+schedule)
+    # distributional population (PopulationSpec overrides minus hospitals/
+    # seed, which this spec owns); mutually exclusive with nodes/topology
+    population: dict | None = None
     # derived-trace knobs (used only when nodes/topology are None)
     bandwidth: float = 12.5e6            # bytes/s default link
     latency: float = 0.02                # seconds default link
@@ -85,11 +90,35 @@ class ScenarioSpec:
         # deferred import: registry-backed backend + capability validation
         from repro.arms import backends as backends_lib
 
+        if not 0.0 < self.participation_rate <= 1.0:
+            raise ValueError("participation_rate must be in (0, 1]")
+        if self.population is not None:
+            if self.nodes is not None or self.topology is not None:
+                raise ValueError(
+                    "population is mutually exclusive with explicit nodes/"
+                    "topology traces (it *generates* them)"
+                )
+            owned = {"hospitals", "seed"} & set(self.population)
+            if owned:
+                raise ValueError(
+                    f"population may not set {sorted(owned)} — the scenario "
+                    f"spec's hospitals/seed fields own those"
+                )
+            # fail here, not mid-sweep: PopulationSpec re-validates the
+            # merged dict including this spec's hospitals count
+            from repro.population.spec import PopulationSpec
+
+            PopulationSpec.from_dict(
+                {"hospitals": max(self.hospitals, 2), "seed": self.seed,
+                 **self.population}
+            )
         backends_lib.validate_scenario(
             arm=self.arm, backend=self.backend, use_secagg=self.use_secagg,
             needs_sim_time=(self.nodes is not None
                             or self.topology is not None
+                            or self.population is not None
                             or self.straggler_ratio > 0),
+            participation_rate=self.participation_rate,
         )
         if self.model_size not in MODEL_SIZES:
             raise ValueError(

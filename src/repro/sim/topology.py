@@ -14,7 +14,11 @@ Builders cover the paper-relevant shapes:
   * ``ring``      — minimal gossip graph;
   * ``k_regular`` — circulant k-regular gossip graph (each node talks to
                     its k nearest ring neighbours), the standard D-PSGD
-                    communication graph.
+                    communication graph;
+  * ``small_world`` — Watts-Strogatz rewiring of the circulant graph:
+                    keeps ~k edges per node but adds long-range shortcuts,
+                    so the hop diameter drops from O(n/k) to O(log n) —
+                    the realistic sparse overlay for 1000-node federations.
 
 Topologies may carry a ``LinkSchedule`` — timestamped link changes (degrade,
 remove, restore) that model WAN churn.  The schedule is applied lazily:
@@ -25,6 +29,7 @@ calls it whenever the simulated clock moves before consulting a link.
 from __future__ import annotations
 
 import dataclasses
+import random
 from typing import Iterable, Mapping, Sequence
 
 
@@ -231,11 +236,44 @@ class Topology:
         return cls._symmetric(n, edges, link, f"{k}-regular")
 
     @classmethod
+    def small_world(cls, n: int, k: int, p: float, seed: int = 0,
+                    link: Link = _DEFAULT_LINK) -> "Topology":
+        """Watts-Strogatz: start from the circulant k-regular ring lattice,
+        rewire each edge's far endpoint with probability ``p`` to a uniform
+        non-neighbour.  Deterministic in ``seed`` (stdlib ``random``), so
+        ``from_trace`` round-trips byte-identically."""
+        if not 2 <= k < n:
+            raise ValueError(f"need 2 <= k < n, got k={k}, n={n}")
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"rewire probability must be in [0, 1], got {p}")
+        rng = random.Random(seed)
+        edges: set[tuple[int, int]] = set()
+        for i in range(n):
+            for step in range(1, k // 2 + 1):
+                edges.add(tuple(sorted((i, (i + step) % n))))
+            if k % 2 == 1 and n % 2 == 0:
+                edges.add(tuple(sorted((i, (i + n // 2) % n))))
+        # rewire in sorted-edge order: iteration order (hence the rewired
+        # graph) is a pure function of (n, k, p, seed)
+        for i, j in sorted(edges):
+            if rng.random() >= p:
+                continue
+            adjacent = {a for a, b in edges if b == i} | \
+                       {b for a, b in edges if a == i}
+            candidates = [v for v in range(n)
+                          if v != i and v not in adjacent]
+            if not candidates:
+                continue
+            edges.discard((i, j))
+            edges.add(tuple(sorted((i, rng.choice(candidates)))))
+        return cls._symmetric(n, edges, link, "small-world")
+
+    @classmethod
     def from_trace(cls, trace: Mapping) -> "Topology":
         """Build from a JSON-serialisable dict.
 
-        {"n": 5, "kind": "full" | "star" | "ring" | "k_regular",
-         "k": 2, "center": 0,
+        {"n": 5, "kind": "full" | "star" | "ring" | "k_regular" | "small_world",
+         "k": 2, "center": 0, "p": 0.1, "seed": 0,
          "default": {"bandwidth": 12.5e6, "latency": 0.02},
          "links": {"0-1": {"bandwidth": 1e6, "latency": 0.1}, ...},
          "schedule": [{"t": 2.0, "link": "0-1", "down": true}, ...]}
@@ -259,6 +297,11 @@ class Topology:
             topo = cls.ring(n, link)
         elif kind == "k_regular":
             topo = cls.k_regular(n, int(trace["k"]), link)
+        elif kind == "small_world":
+            topo = cls.small_world(
+                n, int(trace["k"]), float(trace.get("p", 0.1)),
+                int(trace.get("seed", 0)), link,
+            )
         else:
             raise ValueError(f"unknown topology kind {kind!r}")
         for key, spec in (trace.get("links") or {}).items():

@@ -1,0 +1,245 @@
+"""Trace-then-solve cross-device engine (``repro.population``, DESIGN.md §10).
+
+Pinned contracts:
+
+1. **Sampler honesty** — the empirical sampled fraction over many rounds
+   matches the exact ``q`` the arm hands its RDP accountant (the ε story
+   depends on simulation and accounting using the same number).
+2. **Trace determinism** — the trace phase is byte-identical for a fixed
+   seed, including under link churn and flaky nodes, and round-trips
+   through the content-addressed JSON encoding.
+3. **q=1 bit-identity** — under full participation and ideal conditions
+   the population backend reproduces the ``ideal`` backend bit for bit
+   (the backend sits outside every ``bit_exact_group`` because it is
+   fused-only, so the promise is pinned here instead of by the
+   registry-driven equivalence suite).
+4. **Capability gate** — ``participation_rate < 1`` is refused by any
+   backend without ``supports_subsampling`` (running every hospital while
+   composing ε at the subsampled rate would understate privacy loss).
+5. **Noise top-up** — losing ``m`` of ``n`` distributed-noise shares
+   mid-round triggers a conservative re-scaling back to full calibration.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+import repro.arms as arms
+from repro.arms import backends as backends_lib
+from repro.core import dp as dp_lib
+from repro.population import CohortSampler, ComputeGraph, PopulationSpec
+from repro.population.backend import PopulationRunner
+from repro.population.trace import run_trace
+from repro.sim import Topology, nodes_from_trace
+
+from test_arms_equivalence import _cfg, _make_model, _silos
+
+H = 4
+
+
+# -- spec + topology ---------------------------------------------------------
+
+
+def test_population_spec_roundtrip_and_validation():
+    spec = PopulationSpec(hospitals=64, seed=3, topology="small_world",
+                          degree=6, flaky_fraction=0.1)
+    again = PopulationSpec.from_dict(spec.to_dict())
+    assert again == spec
+    with pytest.raises((TypeError, ValueError)):
+        PopulationSpec.from_dict({"hospitals": 8, "bogus_knob": 1})
+    with pytest.raises(ValueError):
+        PopulationSpec(hospitals=8, topology="torus").validate()
+
+
+def test_build_nodes_deterministic_and_heterogeneous():
+    spec = PopulationSpec(hospitals=200, seed=7, flaky_fraction=0.1)
+    a, b = spec.build_nodes(), spec.build_nodes()
+    assert a == b
+    thr = [n["throughput"] for n in a]
+    assert min(thr) < spec.throughput_median < max(thr)  # lognormal spread
+    flaky = [n for n in a if n.get("dropouts")]
+    assert 0 < len(flaky) <= int(round(0.1 * 200)) + 1
+
+
+def test_small_world_topology_deterministic():
+    def adjacency(t):
+        return [t.neighbors(i) for i in range(50)]
+
+    a = Topology.small_world(50, 6, 0.2, seed=1)
+    assert adjacency(a) == adjacency(Topology.small_world(50, 6, 0.2, seed=1))
+    assert adjacency(a) != adjacency(Topology.small_world(50, 6, 0.2, seed=2))
+    # every node keeps degree >= 1 after rewiring (connectivity floor)
+    assert all(a.neighbors(i) for i in range(50))
+
+
+# -- cohort sampler ----------------------------------------------------------
+
+
+def test_sampler_empirical_rate_matches_accountant_q():
+    """The fraction actually sampled over many rounds converges on the q
+    handed to the RDP accountant — same number, by construction."""
+    q = 0.1
+    sampler = CohortSampler(h=100, q=q, seed=0)
+    for t in range(500):
+        sampler.cohort(t)
+    assert sampler.empirical_rate() == pytest.approx(q, rel=0.05)
+
+    cfg = _cfg(participation_rate=q, rounds=3)
+    arm = arms.get("decaph")(_make_model(5), _silos(), cfg)
+    # the arm composes at rate * participation_rate (two-level caveat:
+    # conservative upper bound, documented in population.sampler)
+    assert arm.acct.sampling_rate == pytest.approx(arm.rate * q)
+
+
+def test_sampler_is_pure_function_of_seed_and_round():
+    a = CohortSampler(h=64, q=0.25, seed=9)
+    b = CohortSampler(h=64, q=0.25, seed=9)
+    assert [a.cohort(t) for t in (5, 2, 2)] == [b.cohort(t) for t in (5, 2, 2)]
+    full = CohortSampler(h=8, q=1.0, seed=0)
+    assert full.cohort(0) == list(range(8))  # q=1: no randomness consumed
+
+
+# -- trace phase -------------------------------------------------------------
+
+
+def _churny_trace(h=50, seed=11):
+    spec = PopulationSpec(hospitals=h, seed=seed, topology="small_world",
+                          degree=6, flaky_fraction=0.2, mean_uptime=30.0,
+                          mean_downtime=5.0, churn_rate=0.01)
+    nodes = nodes_from_trace(spec.build_nodes())
+    topo = Topology.from_trace(spec.build_topology())
+    return run_trace(nodes, topo, rounds=6, q=0.3, seed=seed,
+                     sizes=[32] * h, model_bytes=4096, secure=True,
+                     quorum=3, require=None,
+                     facilitator=lambda t, cohort: cohort[t % len(cohort)])
+
+
+def test_trace_byte_identical_for_fixed_seed():
+    a, b = _churny_trace(), _churny_trace()
+    blob = a.graph.to_json_bytes()
+    assert blob == b.graph.to_json_bytes()
+    assert a.graph.graph_hash() == b.graph.graph_hash()
+    assert _churny_trace(seed=12).graph.graph_hash() != a.graph.graph_hash()
+
+
+def test_trace_graph_roundtrip_and_waves_topological():
+    trace = _churny_trace()
+    again = ComputeGraph.from_json_bytes(trace.graph.to_json_bytes())
+    assert again.to_json_bytes() == trace.graph.to_json_bytes()
+    seen = set()
+    for wave in trace.graph.waves():
+        for node in wave:
+            assert set(node.deps) <= seen  # deps live in earlier waves
+        seen.update(node.id for node in wave)
+    assert len(seen) == len(trace.graph.nodes)
+
+
+def test_trace_content_hash_detects_tampering():
+    trace = _churny_trace()
+    payload = json.loads(trace.graph.to_json_bytes())
+    payload["nodes"][0]["t_end"] += 1.0
+    with pytest.raises(ValueError, match="content hash"):
+        ComputeGraph.from_json_bytes(json.dumps(payload).encode())
+
+
+def test_trace_samples_at_q_and_charges_wire_bytes():
+    trace = _churny_trace()
+    assert trace.empirical_q == pytest.approx(0.3, abs=0.12)
+    assert trace.bytes_on_wire > 0 and trace.wall_clock > 0
+    done = [p for p in trace.rounds if not p.lost]
+    assert done and all(p.delivered for p in done)
+
+
+# -- q=1 bit-identity with the ideal backend ---------------------------------
+
+
+@pytest.mark.parametrize("arm_name", ["decaph", "fl"])
+def test_population_matches_ideal_bit_for_bit_at_q1(arm_name):
+    silos = _silos()
+    model = _make_model(5)
+    cfg = _cfg(use_secagg=False)
+    kind = arms.get(arm_name).topology_kind
+    topo = Topology.star(H, 0) if kind == "star" else Topology.full(H)
+
+    ref = arms.run(arm_name, model, silos, cfg, backend="ideal")
+    pop = arms.run(arm_name, model, silos, cfg, backend="population",
+                   topo=topo)
+
+    assert pop.rounds_completed == ref.rounds_completed
+    assert pop.epsilon == ref.epsilon
+    for x, y in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(pop.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_population_subsampled_run_reports_cohorts():
+    silos = _silos(sizes=(120,) * 6)
+    model = _make_model(5)
+    cfg = _cfg(participation_rate=0.5, rounds=6, use_secagg=False)
+    arm = arms.get("decaph")(model, silos, cfg)
+    runner = PopulationRunner(topo=Topology.full(6))
+    rep = runner.run(arm)
+    sr = runner.last_solve
+    assert rep.rounds_completed >= 1 and rep.epsilon > 0
+    assert 0.0 < sr.empirical_q <= 1.0
+    assert sr.mean_cohort < 6  # subsampling actually shrank cohorts
+    assert sr.wall_seconds > 0 and sr.simulated_seconds > 0
+
+
+# -- capability gate ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ideal", "sim"])
+def test_subsampling_refused_without_capability(backend):
+    cfg = _cfg(participation_rate=0.5)
+    err = backends_lib.compatibility_error(
+        arms.get("decaph"), backends_lib.backend_registry()[backend],
+        use_secagg=False, participation_rate=cfg.participation_rate)
+    assert err is not None and "participation_rate" in err
+    with pytest.raises(ValueError, match="participation_rate"):
+        arms.run("decaph", _make_model(5), _silos(), cfg, backend=backend)
+
+
+def test_population_backend_registered_with_capabilities():
+    info = backends_lib.backend_registry()["population"]
+    assert info.supports_subsampling and info.fused_only
+    assert info.supports_sim_time and not info.supports_secagg
+    assert info.bit_exact_group == ""  # pinned by the q=1 test instead
+
+
+# -- noise top-up on lost SecAgg shares --------------------------------------
+
+
+def test_tree_topup_noise_variance_and_validation():
+    template = {"w": np.zeros(20000, np.float32), "b": np.zeros((), np.float32)}
+    key = jax.random.key(0)
+    top = dp_lib.tree_topup_noise(template, key, clip_norm=1.0,
+                                  noise_multiplier=2.0, missing=3, n_shares=4)
+    # std must be C*sigma*sqrt(m/n): the survivors' shares already carry
+    # (n-m)/n of the calibrated variance
+    want = 1.0 * 2.0 * np.sqrt(3 / 4)
+    assert np.std(np.asarray(top["w"])) == pytest.approx(want, rel=0.05)
+    with pytest.raises(ValueError):
+        dp_lib.tree_topup_noise(template, key, clip_norm=1.0,
+                                noise_multiplier=2.0, missing=5, n_shares=4)
+    with pytest.raises(ValueError):
+        dp_lib.tree_topup_noise(template, key, clip_norm=1.0,
+                                noise_multiplier=2.0, missing=0, n_shares=4)
+
+
+def test_sim_mid_round_dropout_triggers_noise_topup():
+    """A DeCaPH share lost mid-round is compensated: SimTiming counts the
+    top-up and the run still completes with full-calibration noise."""
+    from repro.sim import heterogeneous_trace
+
+    silos = _silos(sizes=(120,) * 5)
+    model = _make_model(5)
+    trace = heterogeneous_trace(5)
+    trace[2]["dropouts"] = [[0.2, None]]  # drops mid-run, never returns
+    rep = arms.run("decaph", model, silos, _cfg(rounds=8), backend="sim",
+                   nodes=nodes_from_trace(trace), topo=Topology.full(5))
+    assert rep.dropout_events == 1
+    assert rep.noise_topups >= 1
+    assert rep.rounds_completed >= 6
