@@ -24,6 +24,7 @@ from __future__ import annotations
 
 from typing import Sequence
 
+import repro.obs as obs
 from repro.arms.base import (
     AggregationServices,
     Arm,
@@ -89,7 +90,9 @@ def run(
         backends.RunSetup(nodes=nodes, topo=topo, mesh=mesh,
                           on_round=on_round)
     )
-    return runner.run(arm_cls(model, participants, cfg))
+    with obs.span("arms.run", cat="train", arm=name, backend=backend,
+                  hospitals=len(participants)):
+        return runner.run(arm_cls(model, participants, cfg))
 
 
 __all__ = [

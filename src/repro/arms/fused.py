@@ -40,6 +40,7 @@ from typing import Any, Callable, Sequence
 import jax
 import numpy as np
 
+import repro.obs as obs
 from repro.arms.base import Contribution, Participant, poisson_batch
 
 # -- jit dispatch accounting -------------------------------------------------
@@ -115,6 +116,7 @@ def stack_poisson(
     the mesh's data-axis size (again mask-inert) and the stacked batch
     arrays are marked for sharding along the example axis.
     """
+    t0 = obs.now()  # host-RNG phase: the one per-round host-side cost
     rate_of = (rate.__getitem__ if not isinstance(rate, (int, float))
                else lambda i: rate)
     pad_of = (pad.__getitem__ if not isinstance(pad, int)
@@ -152,6 +154,8 @@ def stack_poisson(
         example_axis = 1 if steps is None else 2
         for arr in (x, y, masks):
             executor.mark(arr, axis=example_axis)
+    obs.complete("host_rng.stack_poisson", t0, cat="rng",
+                 cohort=len(active), pad=pad_to)
     return CohortBatch(x=x, y=y, masks=masks, counts=counts, sizes=sizes)
 
 

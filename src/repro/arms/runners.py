@@ -29,6 +29,7 @@ from typing import Any, Mapping, Sequence
 import jax
 import numpy as np
 
+import repro.obs as obs
 from repro.arms.backends import BackendInfo, RunSetup, register_backend
 from repro.arms.base import (
     AggregationServices,
@@ -189,9 +190,14 @@ class LocalRunner:
     def _run_rounds(self, arm: RoundArm) -> RunReport:
         cfg, h = arm.cfg, arm.h
         params = arm.init_params()
+        model_bytes = tree_bytes(params, cfg.bytes_per_param)
         rng = np.random.default_rng(cfg.seed)
         logs: list[RoundLog] = []
         for t in range(arm.planned_rounds()):
+          # spans buffer host timestamps only; with recording off this is a
+          # shared no-op context (tests pin zero extra dispatches per round)
+          with obs.span("round", cat="train", arm=arm.name,
+                        backend=self.backend, t=t):
             active = [i for i in range(h) if arm.participates(i, t)]
             if not active:
                 break  # nobody left who can contribute
@@ -202,9 +208,11 @@ class LocalRunner:
             if cfg.fused_rounds:
                 # one dispatch for the whole cohort; with SecAgg off the
                 # reduced aggregate never leaves the device either
-                fr = self._fused_round(arm, params, active, t, rng,
-                                       need_payloads=secure,
-                                       need_reduced=not secure)
+                with obs.span("fused_round", cat="train", t=t,
+                              cohort=len(active)):
+                    fr = self._fused_round(arm, params, active, t, rng,
+                                           need_payloads=secure,
+                                           need_reduced=not secure)
                 if fr is not None:
                     contribs, reduced = fr
             if contribs is None:
@@ -222,10 +230,17 @@ class LocalRunner:
                 fused_reduced=None if secure else reduced,
                 cover=frozenset(contribs),
             )
-            outcome = arm.aggregate(params, contribs, services)
+            # SecAgg (when on) runs inside aggregate via the services; the
+            # span therefore covers reduce + secure-sum + the model step
+            with obs.span("aggregate", cat="train", t=t, secure=secure):
+                outcome = arm.aggregate(params, contribs, services)
             if outcome.stepped:
                 params = outcome.params
                 arm.account()
+                obs.counter("rounds_completed", 1)
+                obs.ledger_round(arm, round=t, backend=self.backend,
+                                 cohort=active, delivered=contribs,
+                                 bytes_up=model_bytes)
                 logs.append(RoundLog(t, dst, outcome.loss, arm.epsilon(),
                                      outcome.aggregate_batch))
                 if self.on_round is not None:
@@ -509,6 +524,10 @@ class SimRunner:
         # idealized backend — without it the sim side would overshoot the
         # operator's budget by one round before should_stop() fires
         for t in range(arm.planned_rounds()):
+          # same no-op-when-disabled discipline as the ideal runner: the span
+          # context brackets every exit path (break/continue) of the round
+          with obs.span("round", cat="train", arm=arm.name,
+                        backend=self.backend, t=t):
             d, ok = self._advance_to_quorum(engine, minimum, require)
             dropouts += d
             if not ok:
@@ -530,8 +549,11 @@ class SimRunner:
                 # the transport below still ships them one by one
                 # delivery may be partial, so the backend sums what arrives:
                 # skip the in-jit reduction (XLA DCEs it in the slim variant)
-                fr = arm.fused_round(params, active, t, rng, len(active),
-                                     need_payloads=True, need_reduced=False)
+                with obs.span("fused_round", cat="train", t=t,
+                              cohort=len(active)):
+                    fr = arm.fused_round(params, active, t, rng, len(active),
+                                         need_payloads=True,
+                                         need_reduced=False)
                 if fr is not None:
                     contribs, _ = fr
             if contribs is None:
@@ -564,16 +586,20 @@ class SimRunner:
             if session is not None:
                 # one host transfer + one masking pass for the whole cohort
                 # (each participant still *ships* its own ciphertext below)
-                ciphers = session.upload_all(
-                    {slot_of[i]: c.payload for i, c in contribs.items()}
-                )
+                with obs.span("secagg.encode", cat="secagg", t=t,
+                              cohort=len(active)):
+                    ciphers = session.upload_all(
+                        {slot_of[i]: c.payload for i, c in contribs.items()}
+                    )
             work = {}
             for i, c in contribs.items():
                 payload = ciphers[slot_of[i]] if ciphers else c.payload
                 work[i] = (payload, nodes[i].compute_time(c.size), model_bytes)
-            delivered, dropped_mid, w, d = self._gather_round(
-                engine, dst, work
-            )
+            with obs.span("transport.gather", cat="sim", t=t,
+                          uploads=len(work)):
+                delivered, dropped_mid, w, d = self._gather_round(
+                    engine, dst, work
+                )
             wire += w
             dropouts += d
             dst_dead = dst in dropped_mid or (
@@ -593,39 +619,56 @@ class SimRunner:
                 if dropped_mid:
                     # survivors reveal shares of each dropped secret so the
                     # facilitator can reconstruct and cancel its pads
-                    recoveries += len(dropped_mid)
-                    wire += secagg_recovery_bytes(
-                        len(active), len(dropped_mid)
-                    )["recovery_bytes"]
-                    dropouts += self._gather_shares(engine, dst, delivered)
+                    with obs.span("secagg.recover", cat="secagg", t=t,
+                                  dropped=len(dropped_mid)):
+                        recoveries += len(dropped_mid)
+                        wire += secagg_recovery_bytes(
+                            len(active), len(dropped_mid)
+                        )["recovery_bytes"]
+                        dropouts += self._gather_shares(
+                            engine, dst, delivered)
 
             topup = None
             if dropped_mid and arm.distributed_noise:
                 # every active participant noised its share for a cohort of
                 # len(active); the dropped shares never arrived
-                topup = dp_lib.tree_topup_noise(
-                    params, jax.random.fold_in(topup_base, t),
-                    clip_norm=cfg.dp.clip_norm,
-                    noise_multiplier=cfg.dp.noise_multiplier,
-                    missing=len(dropped_mid), n_shares=len(active),
-                )
+                with obs.span("noise_topup", cat="dp", t=t,
+                              missing=len(dropped_mid)):
+                    topup = dp_lib.tree_topup_noise(
+                        params, jax.random.fold_in(topup_base, t),
+                        clip_norm=cfg.dp.clip_norm,
+                        noise_multiplier=cfg.dp.noise_multiplier,
+                        missing=len(dropped_mid), n_shares=len(active),
+                    )
+                obs.counter("noise_topups", 1)
                 topups += 1
             dl_contribs = {i: contribs[i] for i in delivered}
-            outcome = arm.aggregate(
-                params, dl_contribs, _SimServices(session, uploads, topup)
-            )
+            # secure decode (when a session exists) happens inside aggregate
+            # via the services object, so this span covers reduce + decode
+            with obs.span("aggregate", cat="train", t=t,
+                          secure=session is not None):
+                outcome = arm.aggregate(
+                    params, dl_contribs,
+                    _SimServices(session, uploads, topup)
+                )
             if not outcome.stepped:
                 lost += 1  # e.g. empty Poisson draw across the cohort
                 continue
             params = outcome.params
-            w, d = self._broadcast(
-                engine, dst, model_bytes,
-                [i for i in range(h) if nodes[i].online],
-            )
+            with obs.span("transport.broadcast", cat="sim", t=t):
+                w, d = self._broadcast(
+                    engine, dst, model_bytes,
+                    [i for i in range(h) if nodes[i].online],
+                )
             wire += w
             dropouts += d
             arm.account()
             completed += 1
+            obs.counter("rounds_completed", 1)
+            obs.ledger_round(arm, round=t, backend=self.backend,
+                             cohort=active, delivered=delivered,
+                             bytes_up=model_bytes,
+                             topup=topup is not None)
             logs.append(RoundLog(t, dst, outcome.loss, arm.epsilon(),
                                  outcome.aggregate_batch))
             if self.on_round is not None:

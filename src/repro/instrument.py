@@ -14,6 +14,21 @@ included, so it measures "how many compiled programs does this phase
 launch" — O(H) on the legacy round loop vs O(1) fused; O(prompt_len) on
 the legacy Python prefill vs O(1) on the jitted prefill program.
 
+Thread-safety: ``python -m repro.serve --train-rounds N`` runs a trainer
+thread concurrently with the decode loop, so both paths dispatch through
+this module at once.  The counter increments under a lock (an unguarded
+``+= 1`` loses ticks under contention, which would fake sub-O(1) dispatch
+rates in the benchmarks), and the active executor is **thread-local**: a
+mesh backend's ``execution_context`` install is visible only to the
+thread that opened it, so a concurrent serving thread can never be routed
+through another thread's mesh executor.
+
+When ``repro.obs`` recording is enabled, every dispatch additionally
+feeds the process recorder: a ``jit_dispatches`` counter event plus a
+``jit_dispatch`` span bracketing the launch, which is what lets obs phase
+breakdowns attribute wall time to compiled-program dispatch.  Recording
+off means exactly the pre-obs behavior (a lock, an int, nothing else).
+
 ``execution_context`` routes every instrumented call through an installed
 executor (the SPMD ``MeshExecutor`` in ``launch/federated.py``) so a mesh
 backend can re-stage the same program with explicit shardings.
@@ -23,32 +38,38 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import threading
 from typing import Callable
 
 import jax
 
-_jit_dispatch_count = 0
+import repro.obs as obs
 
-# Active cohort-program executor (DESIGN.md §8).  ``None`` means plain jit on
-# the default device; an SPMD backend installs a ``launch.federated``
-# MeshExecutor for the duration of each fused round, which re-dispatches the
-# same program onto a device mesh with explicit shardings.
-_EXECUTOR = None
+_count_lock = threading.Lock()
+_jit_dispatch_count = 0  # guarded by _count_lock
+
+# Active cohort-program executor (DESIGN.md §8), per-thread.  ``None`` means
+# plain jit on the default device; an SPMD backend installs a
+# ``launch.federated`` MeshExecutor for the duration of each fused round,
+# which re-dispatches the same program onto a device mesh with explicit
+# shardings.
+_tls = threading.local()
 
 
 @contextlib.contextmanager
 def execution_context(executor):
-    """Route every ``instrumented_jit`` call through ``executor`` while open."""
-    global _EXECUTOR
-    prev, _EXECUTOR = _EXECUTOR, executor
+    """Route this THREAD's ``instrumented_jit`` calls through ``executor``
+    while open (other threads keep their own executor, or none)."""
+    prev = getattr(_tls, "executor", None)
+    _tls.executor = executor
     try:
         yield
     finally:
-        _EXECUTOR = prev
+        _tls.executor = prev
 
 
 def active_executor():
-    return _EXECUTOR
+    return getattr(_tls, "executor", None)
 
 
 def instrumented_jit(fn: Callable, **jit_kwargs) -> Callable:
@@ -63,10 +84,19 @@ def instrumented_jit(fn: Callable, **jit_kwargs) -> Callable:
     @functools.wraps(fn)
     def wrapper(*args, **kwargs):
         global _jit_dispatch_count
-        _jit_dispatch_count += 1
-        if _EXECUTOR is not None:
-            return _EXECUTOR.execute(wrapper, args, kwargs)
-        return compiled(*args, **kwargs)
+        with _count_lock:
+            _jit_dispatch_count += 1
+        executor = getattr(_tls, "executor", None)
+        t0 = obs.now()  # None when recording is off
+        if executor is not None:
+            out = executor.execute(wrapper, args, kwargs)
+        else:
+            out = compiled(*args, **kwargs)
+        if t0 is not None:
+            obs.complete("jit_dispatch", t0, cat="jit",
+                         fn=getattr(fn, "__name__", "<fn>"))
+            obs.counter("jit_dispatches", 1)
+        return out
 
     wrapper.jitted = compiled
     wrapper.fn = fn
@@ -94,9 +124,11 @@ def instrumented_jit_pair(fn: Callable, *, reduced_pos: int = 1,
 
 def jit_dispatches() -> int:
     """Total instrumented jit program launches since the last reset."""
-    return _jit_dispatch_count
+    with _count_lock:
+        return _jit_dispatch_count
 
 
 def reset_jit_dispatches() -> None:
     global _jit_dispatch_count
-    _jit_dispatch_count = 0
+    with _count_lock:
+        _jit_dispatch_count = 0

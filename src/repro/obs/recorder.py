@@ -1,0 +1,266 @@
+"""The structured tracing core: spans, counters, gauges, one Recorder.
+
+Zero-dependency by design (stdlib only — no numpy, no JAX): the trace
+phase of ``repro.population`` and the report layer of ``repro.scenarios``
+both import without paying for the JAX stack, and observability must never
+change that.  The ``jax.profiler`` bridge is opt-in and imported lazily.
+
+A ``Recorder`` is a process-wide, **thread-safe** event buffer.  Three
+typed event kinds, all host-side timestamps only (``time.perf_counter``
+relative to the recorder's epoch — recording never forces a device sync):
+
+  * **span**  — a named duration with thread id and nesting ``depth``
+    (per-thread stack), recorded as ONE complete event at exit;
+  * **counter** — a monotonically accumulated metric; each increment
+    records the post-increment ``total`` so the export is a time series;
+  * **gauge** — a sampled instantaneous value.
+
+Spans come in two spellings with identical output: the ``span()`` context
+manager for straight-line code, and ``now()`` + ``complete()`` for loop
+bodies full of ``continue``/``break`` where a ``with`` block would force
+re-indenting a whole phase.
+
+The event schema (the JSONL export, one object per line — DESIGN.md §11):
+
+    {"type": "meta", "schema": 1, "pid": ..., "epoch": ...}       # line 1
+    {"type": "span", "name", "cat", "ts", "dur", "tid", "depth", "args"}
+    {"type": "counter", "name", "ts", "inc", "total", "tid", "args"}
+    {"type": "gauge", "name", "ts", "value", "tid", "args"}
+
+``ts``/``dur`` are float seconds since the recorder epoch; the Chrome
+trace converter (``repro.obs.convert``) scales to microseconds.  Events
+append under one lock in completion order, so a reader never sees a
+half-written record; ``ts`` across threads is NOT monotone in file order
+(two threads finish spans interleaved) and validation does not pretend
+otherwise.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Iterator, Mapping, Sequence
+
+SCHEMA_VERSION = 1
+
+EVENT_TYPES = ("meta", "span", "counter", "gauge")
+
+
+class Recorder:
+    """Thread-safe, process-wide buffer of spans / counters / gauges."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter,
+                 jax_profiler: bool = False) -> None:
+        self._lock = threading.Lock()
+        self._clock = clock
+        self._epoch = clock()
+        self._events: list[dict] = []
+        self._counters: dict[str, float] = {}
+        self._tls = threading.local()     # per-thread span stack (depth)
+        self._annotation = None           # jax.profiler.TraceAnnotation class
+        if jax_profiler:
+            self.attach_jax_profiler()
+        # the privacy ledger rides the recorder so one enable() call turns
+        # on the whole observability story; import here would be circular
+        # only in spirit — ledger.py is stdlib-only too
+        from repro.obs.ledger import PrivacyLedger
+
+        self.ledger = PrivacyLedger()
+
+    # -- clock ----------------------------------------------------------------
+
+    def now(self) -> float:
+        """Seconds since the recorder's epoch (host clock, no device sync)."""
+        return self._clock() - self._epoch
+
+    # -- jax bridge -----------------------------------------------------------
+
+    def attach_jax_profiler(self) -> bool:
+        """Opt in to bracketing spans with ``jax.profiler.TraceAnnotation``
+        so obs spans show up inside XLA profiler traces.  Returns False
+        (and stays detached) when JAX is unavailable — the core must never
+        require it."""
+        try:
+            from jax.profiler import TraceAnnotation
+        except Exception:  # pragma: no cover - depends on environment
+            return False
+        self._annotation = TraceAnnotation
+        return True
+
+    # -- spans ----------------------------------------------------------------
+
+    def _depth(self) -> int:
+        return getattr(self._tls, "depth", 0)
+
+    @contextlib.contextmanager
+    def span(self, name: str, *, cat: str = "obs",
+             **args: Any) -> Iterator[None]:
+        """Nestable timed region; one complete event is recorded at exit."""
+        depth = self._depth()
+        self._tls.depth = depth + 1
+        annot = self._annotation(name) if self._annotation else None
+        if annot is not None:
+            annot.__enter__()
+        t0 = self.now()
+        try:
+            yield
+        finally:
+            t1 = self.now()
+            if annot is not None:
+                annot.__exit__(None, None, None)
+            self._tls.depth = depth
+            self._emit({
+                "type": "span", "name": name, "cat": cat,
+                "ts": t0, "dur": t1 - t0,
+                "tid": threading.get_ident(), "depth": depth,
+                "args": args,
+            })
+
+    def complete(self, name: str, t_start: float, *, cat: str = "obs",
+                 **args: Any) -> None:
+        """Record a span that started at ``t_start`` (from ``now()``) and
+        ends now — the non-context-manager spelling for loop bodies."""
+        t1 = self.now()
+        self._emit({
+            "type": "span", "name": name, "cat": cat,
+            "ts": t_start, "dur": t1 - t_start,
+            "tid": threading.get_ident(), "depth": self._depth(),
+            "args": args,
+        })
+
+    # -- counters / gauges ----------------------------------------------------
+
+    def counter(self, name: str, inc: float = 1.0, **args: Any) -> float:
+        """Accumulate ``inc`` onto counter ``name``; returns the new total.
+        The event records the post-increment total so the JSONL stream is a
+        ready-made time series for the Chrome-trace ``C`` phase."""
+        ts = self.now()
+        with self._lock:
+            total = self._counters.get(name, 0.0) + inc
+            self._counters[name] = total
+            self._events.append({
+                "type": "counter", "name": name, "ts": ts,
+                "inc": inc, "total": total,
+                "tid": threading.get_ident(), "args": args,
+            })
+        return total
+
+    def gauge(self, name: str, value: float, **args: Any) -> None:
+        self._emit({
+            "type": "gauge", "name": name, "ts": self.now(),
+            "value": value, "tid": threading.get_ident(), "args": args,
+        })
+
+    # -- reads ----------------------------------------------------------------
+
+    def _emit(self, event: dict) -> None:
+        with self._lock:
+            self._events.append(event)
+
+    def events(self) -> list[dict]:
+        """Snapshot of all recorded events (completion order)."""
+        with self._lock:
+            return list(self._events)
+
+    def counter_totals(self) -> dict[str, float]:
+        with self._lock:
+            return dict(self._counters)
+
+    def span_totals(self) -> dict[str, tuple[int, float]]:
+        """name -> (count, total seconds) over recorded spans."""
+        out: dict[str, tuple[int, float]] = {}
+        for ev in self.events():
+            if ev["type"] != "span":
+                continue
+            n, s = out.get(ev["name"], (0, 0.0))
+            out[ev["name"]] = (n + 1, s + ev["dur"])
+        return out
+
+    # -- export ---------------------------------------------------------------
+
+    def meta(self) -> dict:
+        return {"type": "meta", "schema": SCHEMA_VERSION,
+                "pid": os.getpid(), "epoch": self._epoch}
+
+    def to_jsonl(self) -> str:
+        lines = [json.dumps(self.meta(), sort_keys=True)]
+        lines += [json.dumps(ev, sort_keys=True) for ev in self.events()]
+        return "\n".join(lines) + "\n"
+
+    def write_jsonl(self, path: str | os.PathLike) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_jsonl())
+
+
+# -- stream readers / validation ----------------------------------------------
+
+
+class EventStreamError(ValueError):
+    """A JSONL event stream failed structural validation."""
+
+
+def read_events(path: str | os.PathLike) -> list[dict]:
+    """Parse a JSONL event file (including the leading meta line)."""
+    events = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                events.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise EventStreamError(f"line {lineno}: not JSON: {e}") from e
+    return events
+
+
+_REQUIRED: Mapping[str, tuple[str, ...]] = {
+    "meta": ("schema", "pid"),
+    "span": ("name", "ts", "dur", "tid", "depth", "args"),
+    "counter": ("name", "ts", "inc", "total", "tid"),
+    "gauge": ("name", "ts", "value", "tid"),
+}
+
+
+def validate_events(events: Sequence[Mapping]) -> dict:
+    """Structural validation of an event stream; returns a summary dict.
+
+    Checks: known event types, required fields, non-negative durations and
+    depths, per-name counter totals consistent with the per-event
+    increments.  Raises ``EventStreamError`` on the first violation.
+    """
+    totals: dict[str, float] = {}
+    n_by_type: dict[str, int] = {}
+    for i, ev in enumerate(events):
+        etype = ev.get("type")
+        if etype not in EVENT_TYPES:
+            raise EventStreamError(f"event {i}: unknown type {etype!r}")
+        missing = [k for k in _REQUIRED[etype] if k not in ev]
+        if missing:
+            raise EventStreamError(
+                f"event {i} ({etype}): missing fields {missing}")
+        n_by_type[etype] = n_by_type.get(etype, 0) + 1
+        if etype == "span":
+            if ev["dur"] < 0:
+                raise EventStreamError(
+                    f"event {i}: span {ev['name']!r} has negative duration")
+            if ev["depth"] < 0:
+                raise EventStreamError(
+                    f"event {i}: span {ev['name']!r} has negative depth")
+        elif etype == "counter":
+            # counters are monotone per name and each event carries its
+            # post-increment total; within one thread's stream the totals
+            # must chain.  Across threads the totals interleave but remain
+            # consistent because increments happen under the recorder lock
+            # in file order.
+            expect = totals.get(ev["name"], 0.0) + ev["inc"]
+            if abs(expect - ev["total"]) > 1e-9 * max(1.0, abs(expect)):
+                raise EventStreamError(
+                    f"event {i}: counter {ev['name']!r} total {ev['total']} "
+                    f"does not chain from running sum {expect}")
+            totals[ev["name"]] = ev["total"]
+    return {"events": len(events), "by_type": n_by_type,
+            "counter_totals": totals}

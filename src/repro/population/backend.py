@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from typing import Sequence
 
+import repro.obs as obs
 from repro.arms.backends import BackendInfo, RunSetup, register_backend
 from repro.arms.base import Arm, RoundArm, tree_bytes
 from repro.arms.results import RunReport, SimTiming
@@ -100,24 +101,28 @@ class PopulationRunner:
         # secure=True models the aggregate-level SecAgg cost whenever the
         # arm's protocol runs behind SecAgg in production, even though this
         # backend never executes the wire protocol (use_secagg is refused)
-        return run_trace(
-            nodes, topo,
-            rounds=arm.planned_rounds(),
-            q=cfg.participation_rate,
-            seed=cfg.seed,
-            sizes=[arm.round_cost(i) for i in range(arm.h)],
-            model_bytes=model_bytes,
-            secure=arm.secure_uploads,
-            quorum=minimum,
-            require=require,
-            facilitator=arm.facilitator,
-            secagg_threshold=cfg.secagg_threshold,
-            eval_every=cfg.eval_every,
-        )
+        with obs.span("population.trace", cat="population",
+                      hospitals=arm.h, rounds=arm.planned_rounds()):
+            return run_trace(
+                nodes, topo,
+                rounds=arm.planned_rounds(),
+                q=cfg.participation_rate,
+                seed=cfg.seed,
+                sizes=[arm.round_cost(i) for i in range(arm.h)],
+                model_bytes=model_bytes,
+                secure=arm.secure_uploads,
+                quorum=minimum,
+                require=require,
+                facilitator=arm.facilitator,
+                secagg_threshold=cfg.secagg_threshold,
+                eval_every=cfg.eval_every,
+            )
 
     def run(self, arm: Arm) -> RunReport:
         trace = self.trace(arm)
-        result = solve(trace, arm, on_round=self.on_round)
+        with obs.span("population.solve", cat="population",
+                      hospitals=arm.h, rounds=len(trace.rounds)):
+            result = solve(trace, arm, on_round=self.on_round)
         self.last_trace = trace
         self.last_solve = result.report
         rep = result.report

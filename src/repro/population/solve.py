@@ -35,10 +35,12 @@ from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
+import repro.obs as obs
 from repro.arms.base import (
     AggregationServices,
     Contribution,
     RoundArm,
+    tree_bytes,
     tree_sum,
 )
 from repro.arms.results import RoundLog
@@ -116,6 +118,7 @@ def solve(
 
     rng = np.random.default_rng(cfg.seed)
     topup_base = jax.random.key(cfg.seed * 31 + dp_lib.TOPUP_SALT)
+    model_bytes = tree_bytes(params, cfg.bytes_per_param)
     logs: list[RoundLog] = []
     completed = 0
     solve_lost = 0
@@ -124,6 +127,10 @@ def solve(
     eval_rounds = {n.round for n in trace.graph.nodes if n.kind == "eval"}
 
     for plan in trace.rounds:
+      # trace-lost rounds exit the span in microseconds; executed rounds
+      # time the fused dispatch + aggregate for the phase breakdown
+      with obs.span("round", cat="population", arm=arm.name, t=plan.t,
+                    lost=plan.lost):
         if plan.lost:
             continue  # voided pre-compute: no rng consumed (see module doc)
         t = plan.t
@@ -142,14 +149,15 @@ def solve(
             solve_lost += 1
             continue
 
-        if missing == 0:
-            # whole cohort delivered: payloads stay on device, the in-jit
-            # reduced sum serves the aggregation
-            fr = arm.fused_round(params, active, t, rng, len(active),
-                                 need_payloads=False, need_reduced=True)
-        else:
-            fr = arm.fused_round(params, active, t, rng, len(active),
-                                 need_payloads=True, need_reduced=False)
+        with obs.span("fused_round", cat="train", t=t, cohort=len(active)):
+            if missing == 0:
+                # whole cohort delivered: payloads stay on device, the
+                # in-jit reduced sum serves the aggregation
+                fr = arm.fused_round(params, active, t, rng, len(active),
+                                     need_payloads=False, need_reduced=True)
+            else:
+                fr = arm.fused_round(params, active, t, rng, len(active),
+                                     need_payloads=True, need_reduced=False)
         if fr is None:
             raise RuntimeError(
                 f"arm {arm.name!r} has no fused round-step; the population "
@@ -162,20 +170,24 @@ def solve(
             # each of the n_shares participants added N(0, (Cσ)²/n) — with
             # ``missing`` shares lost the sum is under-noised; restore the
             # full calibration conservatively (core.dp.tree_topup_noise)
-            topup = dp_lib.tree_topup_noise(
-                params, jax.random.fold_in(topup_base, t),
-                clip_norm=cfg.dp.clip_norm,
-                noise_multiplier=cfg.dp.noise_multiplier,
-                missing=missing, n_shares=len(active),
-            )
+            with obs.span("noise_topup", cat="dp", t=t, missing=missing):
+                topup = dp_lib.tree_topup_noise(
+                    params, jax.random.fold_in(topup_base, t),
+                    clip_norm=cfg.dp.clip_norm,
+                    noise_multiplier=cfg.dp.noise_multiplier,
+                    missing=missing, n_shares=len(active),
+                )
+            obs.counter("noise_topups", 1)
             noise_topups += 1
 
         services = _PopulationServices(
             fused_reduced=reduced, cover=frozenset(delivered), topup=topup,
         )
-        outcome = arm.aggregate(
-            params, {i: contribs[i] for i in delivered}, services
-        )
+        with obs.span("aggregate", cat="train", t=t,
+                      delivered=len(delivered)):
+            outcome = arm.aggregate(
+                params, {i: contribs[i] for i in delivered}, services
+            )
         if not outcome.stepped:
             solve_lost += 1  # e.g. empty Poisson draw across the cohort
             if arm.void_logs:
@@ -185,6 +197,10 @@ def solve(
         params = outcome.params
         arm.account()
         completed += 1
+        obs.counter("rounds_completed", 1)
+        obs.ledger_round(arm, round=t, backend="population",
+                         cohort=active, delivered=delivered,
+                         bytes_up=model_bytes, topup=topup is not None)
         logs.append(RoundLog(t, plan.dst, outcome.loss, arm.epsilon(),
                              outcome.aggregate_batch))
         if t in eval_rounds:

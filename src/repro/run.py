@@ -21,6 +21,7 @@ import argparse
 import sys
 
 import repro.arms as arms
+import repro.obs as obs
 from repro.arms import backends as backends_lib
 from repro.core.dp import DPConfig
 from repro.data.synthetic import make_gemini_like
@@ -123,6 +124,9 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--smoke", action="store_true",
                    help="every registered arm x every registered backend, "
                         "tiny shapes")
+    p.add_argument("--obs", default=None, metavar="DIR",
+                   help="record obs spans/counters + privacy ledger and "
+                        "export events/ledger/Chrome trace into DIR")
     args = p.parse_args(argv)
 
     if args.list:
@@ -147,12 +151,17 @@ def main(argv: list[str] | None = None) -> int:
 
     if not args.arm:
         p.error("--arm is required (or use --list / --smoke)")
+    rec = obs.enable() if args.obs else None
     run_one(args.arm, args.backend, rounds=args.rounds,
             hospitals=args.hospitals, features=args.features,
             examples=args.examples, batch=args.batch, seed=args.seed,
             sigma=args.sigma,
             use_secagg=backends_lib.get_backend(
                 args.backend).info.supports_secagg)
+    if rec is not None:
+        paths = obs.export(args.obs, rec)
+        obs.disable()
+        print(f"obs: wrote {', '.join(str(v) for v in paths.values())}")
     return 0
 
 

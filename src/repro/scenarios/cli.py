@@ -18,6 +18,7 @@ import argparse
 import os
 import sys
 
+import repro.obs as obs
 from repro.scenarios import grid as grid_lib
 from repro.scenarios import presets as presets_lib
 from repro.scenarios import report as report_lib
@@ -64,6 +65,14 @@ def _sweep_cells(args, specs, sweep_name: str, default_out: str) -> int:
     return 0
 
 
+def _export_obs(args) -> None:
+    if args.obs and obs.recorder() is not None:
+        paths = obs.export(args.obs)
+        obs.disable()
+        print(f"obs: wrote {', '.join(str(v) for v in paths.values())}",
+              file=sys.stderr)
+
+
 def main(argv: list[str] | None = None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.scenarios",
@@ -92,7 +101,13 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--assert-cached", action="store_true",
                    help="exit 1 if any cell had to execute (CI cache check)")
     p.add_argument("--arm", help="override the arm for --run")
+    p.add_argument("--obs", default=None, metavar="DIR",
+                   help="record obs spans (per-cell phase breakdowns in the "
+                        "BENCH rows) and export artifacts into DIR; "
+                        "inline cells only — pool workers do not record")
     args = p.parse_args(argv)
+    if args.obs:
+        obs.enable()
 
     if args.list:
         _print_list()
@@ -103,11 +118,15 @@ def main(argv: list[str] | None = None) -> int:
         if args.arm:
             spec = spec.replace(arm=args.arm,
                                 name=f"{spec.name}/arm={args.arm}")
-        return _sweep_cells(args, [spec], spec.name, "BENCH_run.json")
+        rc = _sweep_cells(args, [spec], spec.name, "BENCH_run.json")
+        _export_obs(args)
+        return rc
 
     if args.sweep:
         specs = grid_lib.get_sweep(args.sweep).specs()
-        return _sweep_cells(args, specs, args.sweep, "BENCH_sweep.json")
+        rc = _sweep_cells(args, specs, args.sweep, "BENCH_sweep.json")
+        _export_obs(args)
+        return rc
 
     # --report: cache-only re-render
     sweep = grid_lib.get_sweep(args.report)

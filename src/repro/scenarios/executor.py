@@ -29,6 +29,7 @@ import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import Callable, Sequence
 
+import repro.obs as obs
 from repro.scenarios import presets as presets_lib
 from repro.scenarios.cache import ResultCache
 from repro.scenarios.spec import ScenarioSpec
@@ -121,16 +122,20 @@ def run_spec(spec: ScenarioSpec) -> dict:
     import repro.arms as arms
 
     model, silos, cfg, nodes, topo = build_scenario(spec)
+    rec = obs.recorder()
+    spans_before = rec.span_totals() if rec is not None else None
     t0 = time.time()
-    rep = arms.run(spec.arm, model, silos, cfg, backend=spec.backend,
-                   nodes=nodes, topo=topo)
+    with obs.span("sweep.cell", cat="sweep", cell=spec.name, arm=spec.arm,
+                  backend=spec.backend, hospitals=spec.hospitals):
+        rep = arms.run(spec.arm, model, silos, cfg, backend=spec.backend,
+                       nodes=nodes, topo=topo)
     host_seconds = time.time() - t0
     # rep.params is always the arm's headline model: node arms pick it in
     # consensus() (local -> node 0, gossip -> the average)
     headline = rep.params
     n_params = int(sum(np.prod(np.shape(leaf)) or 1
                        for leaf in jax.tree_util.tree_leaves(headline)))
-    return {
+    row = {
         "name": spec.name,
         "key": spec.spec_hash(),
         "task": spec.task,
@@ -155,6 +160,18 @@ def run_spec(spec: ScenarioSpec) -> dict:
         "noise_topups": int(rep.noise_topups),
         "host_seconds": host_seconds,
     }
+    if spans_before is not None:
+        # per-cell host-time phase breakdown (fused dispatch vs aggregate vs
+        # transport ...) — the delta of the recorder's span totals across
+        # this cell, surfaced in the BENCH row only when recording is on
+        after = rec.span_totals()
+        row["phase_seconds"] = {
+            name: round(total - (spans_before.get(name) or (0, 0.0))[1], 6)
+            for name, (_, total) in sorted(after.items())
+            if total - (spans_before.get(name) or (0, 0.0))[1] > 0
+            and name != "sweep.cell"
+        }
+    return row
 
 
 def _pool_init(cache_root: str) -> None:

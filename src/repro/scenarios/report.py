@@ -50,7 +50,8 @@ def fit_power_law(xs: Sequence[float], ys: Sequence[float]) -> dict | None:
 # a seed group must agree or the group is not a seed group.
 _SEED_METRICS = ("epsilon", "accuracy", "mean_loss", "wall_clock",
                  "bytes_on_wire", "rounds_completed", "recoveries",
-                 "lost_rounds", "dropout_events", "host_seconds")
+                 "lost_rounds", "dropout_events", "noise_topups",
+                 "host_seconds")
 _GROUP_KEYS = ("task", "arm", "backend", "hospitals", "model_size",
                "model_params")
 
@@ -180,15 +181,21 @@ def markdown_report(sweep_name: str, cells: Sequence[dict],
         lines.append("")
     lines += ["## Cells", "",
               "| cell | arm | H | size | rounds | ε | utility | "
-              "sim wall (s) | bytes | recov |",
-              "|---|---|---|---|---|---|---|---|---|---|"]
+              "sim wall (s) | host (s) | bytes | recov | topups |",
+              "|---|---|---|---|---|---|---|---|---|---|---|---|"]
     for c in cells:
+        # sim wall vs host seconds side by side: the simulated federation
+        # clock tells the systems story, host seconds what the sweep paid;
+        # .get() keeps pre-topup cached cells renderable
+        host = c.get("host_seconds")
         lines.append(
             f"| {c['name']} | {c['arm']} | {c['hospitals']} | "
             f"{c['model_size']} | {c['rounds_completed']} | "
             f"{c['epsilon']:.2f} | {c['accuracy']:.3f} | "
-            f"{c['wall_clock']:.3f} | {c['bytes_on_wire']:.0f} | "
-            f"{c['recoveries']} |"
+            f"{c['wall_clock']:.3f} | "
+            f"{'-' if host is None else format(host, '.3f')} | "
+            f"{c['bytes_on_wire']:.0f} | {c['recoveries']} | "
+            f"{c.get('noise_topups', '-')} |"
         )
     lines.append("")
     return "\n".join(lines)

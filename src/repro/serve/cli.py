@@ -23,6 +23,7 @@ import json
 import tempfile
 import threading
 
+import repro.obs as obs
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.serve.handoff import CheckpointWatcher
 from repro.serve.metrics import render_markdown, summarize
@@ -58,11 +59,15 @@ def build_parser() -> argparse.ArgumentParser:
                    help="federation arm for --train-rounds")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="write the summary row as JSON")
+    p.add_argument("--obs", default=None, metavar="DIR",
+                   help="record obs spans/counters for the whole run and "
+                        "export events + ledger + Chrome trace into DIR")
     return p
 
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+    rec = obs.enable() if args.obs else None
     engine = ServeEngine(ServeConfig(
         arch=args.arch, slots=args.slots, max_len=args.max_len,
         temperature=args.temperature, seed=args.seed, smoke=not args.full,
@@ -105,4 +110,8 @@ def main(argv=None) -> int:
         with open(args.json, "w") as f:
             json.dump(row, f, indent=2)
         print(f"wrote {args.json}")
+    if rec is not None:
+        paths = obs.export(args.obs, rec)
+        obs.disable()
+        print(f"obs: wrote {', '.join(str(v) for v in paths.values())}")
     return 0

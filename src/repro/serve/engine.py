@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.configs import get_config, get_smoke_config
 from repro.instrument import instrumented_jit
 from repro.models import transformer as tf
@@ -148,6 +149,7 @@ class ServeEngine:
         self.params = params
         self.serving_round = round_idx
         self.swaps += 1
+        obs.counter("serve.swaps", 1, round=round_idx)
 
     def poll_watcher(self, watcher) -> bool:
         """Swap in the newest published checkpoint, if any.  True on swap."""
@@ -183,11 +185,14 @@ class ServeEngine:
         key = jax.random.fold_in(self._key, (self._admit_counter << 1) | 1)
         self._admit_counter += 1
         tokens = jnp.asarray(request.prompt, jnp.int32)[None]
-        tok0, slot_cache = self._prefill(self.params, tokens, key)
-        self.cache = self._insert(self.cache, slot_cache,
-                                  jnp.asarray(idx, jnp.int32))
+        with obs.span("serve.admit", cat="serve", rid=request.rid,
+                      prompt=len(request.prompt), slot=idx):
+            tok0, slot_cache = self._prefill(self.params, tokens, key)
+            self.cache = self._insert(self.cache, slot_cache,
+                                      jnp.asarray(idx, jnp.int32))
+            tok0 = int(np.asarray(tok0)[0])
         self.admit_dispatches += 2
-        tok0 = int(np.asarray(tok0)[0])
+        obs.counter("serve.admits", 1)
         request.t_admit = request.t_first = now
         request.round_at_first = self.serving_round
         request.tokens.append(tok0)
@@ -216,12 +221,17 @@ class ServeEngine:
                 positions[i] = s.position
         key = jax.random.fold_in(self._key, self._step_counter << 1)
         self._step_counter += 1
-        nxt, self.cache = self._decode(
-            self.params, self.cache, tokens, positions, key
-        )
+        # span covers the dispatch AND the host sync: together they are the
+        # per-token latency the metrics layer reports as TPOT
+        with obs.span("serve.decode_step", cat="serve",
+                      active=self.active_count()):
+            nxt, self.cache = self._decode(
+                self.params, self.cache, tokens, positions, key
+            )
+            nxt = np.asarray(nxt)  # the single per-token host sync
         self.decode_steps += 1
         self.decode_dispatches += 1
-        nxt = np.asarray(nxt)  # the single per-token host sync
+        obs.counter("serve.decode_steps", 1)
         finished: list[Request] = []
         for i, s in enumerate(self.slots):
             if s is None:
@@ -237,6 +247,8 @@ class ServeEngine:
                 s.request.t_done = now
                 finished.append(s.request)
                 self.slots[i] = None   # evict: host bookkeeping only
+        if finished:
+            obs.counter("serve.evictions", len(finished))
         return finished
 
 

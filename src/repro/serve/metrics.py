@@ -41,6 +41,9 @@ def summarize(result: TraceResult, *, slots: int, rate: float,
     n_tokens = sum(len(r.tokens) for r in done)
     occ = [s.n_active for s in result.steps]
     behind = [s.rounds_behind for s in result.steps]
+    # every ratio below must survive degenerate traces: zero completed
+    # requests, zero decode steps (all 1-token budgets), zero wall (empty
+    # schedule), or a slots=0 probe config
     row = {
         "rate_qps": rate,
         "slots": slots,
@@ -50,10 +53,13 @@ def summarize(result: TraceResult, *, slots: int, rate: float,
         "throughput_tok_s": round(n_tokens / result.wall, 2)
         if result.wall > 0 else 0.0,
         "ttft_p50_ms": round(_pct(ttft, 50) * 1e3, 2),
+        "ttft_p95_ms": round(_pct(ttft, 95) * 1e3, 2),
         "ttft_p99_ms": round(_pct(ttft, 99) * 1e3, 2),
         "tpot_p50_ms": round(_pct(tpot, 50) * 1e3, 2),
+        "tpot_p95_ms": round(_pct(tpot, 95) * 1e3, 2),
         "tpot_p99_ms": round(_pct(tpot, 99) * 1e3, 2),
-        "occupancy": round(float(np.mean(occ)) / slots, 4) if occ else 0.0,
+        "occupancy": round(float(np.mean(occ)) / slots, 4)
+        if occ and slots > 0 else 0.0,
         "decode_steps": result.decode_steps,
         "decode_dispatches": result.decode_dispatches,
         "dispatches_per_step": round(
@@ -74,8 +80,10 @@ _MD_COLS = (
     ("rate_qps", "rate (q/s)"),
     ("throughput_tok_s", "tok/s"),
     ("ttft_p50_ms", "TTFT p50 (ms)"),
+    ("ttft_p95_ms", "TTFT p95 (ms)"),
     ("ttft_p99_ms", "TTFT p99 (ms)"),
     ("tpot_p50_ms", "TPOT p50 (ms)"),
+    ("tpot_p95_ms", "TPOT p95 (ms)"),
     ("tpot_p99_ms", "TPOT p99 (ms)"),
     ("occupancy", "occupancy"),
     ("dispatches_per_step", "disp/step"),
