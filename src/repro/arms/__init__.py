@@ -42,7 +42,9 @@ from repro.arms.base import (
     tree_sum,
 )
 from repro.arms import backends
+from repro.arms import clipping
 from repro.arms.backends import BackendInfo, RunSetup, register_backend
+from repro.arms.clipping import GhostCapability
 from repro.arms.registry import get, names, register
 from repro.arms.results import RoundLog, RunReport, SimTiming
 from repro.arms.runners import LocalRunner, SimRunner, default_topology
@@ -86,6 +88,10 @@ def run(
     arm_cls = get(name)
     backend_cls = backends.get_backend(backend)
     backends.validate_run(arm_cls, backend_cls.info, cfg)
+    # Clipping-path negotiation (DESIGN.md §12): the model is in scope here,
+    # so an explicit clipping="ghost" against a model without the capability
+    # fails before any compute, like every other invalid combination.
+    clipping.resolve(model, cfg)
     runner = backend_cls.from_setup(
         backends.RunSetup(nodes=nodes, topo=topo, mesh=mesh,
                           on_round=on_round)
@@ -104,7 +110,9 @@ __all__ = [
     "LocalRunner",
     "RunSetup",
     "backends",
+    "clipping",
     "register_backend",
+    "GhostCapability",
     "Model",
     "NodeArm",
     "Participant",

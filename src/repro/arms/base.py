@@ -54,6 +54,10 @@ class Model:
     init_fn: Callable[[jax.Array], PyTree]
     loss_fn: Callable[[PyTree, PyTree], jax.Array]  # (params, one example) -> scalar
     predict_fn: Callable[[PyTree, jax.Array], jax.Array]
+    # optional capability: ghost-clipping support (arms/clipping.py).  Set by
+    # constructors that know the model is a dense decoder stack with untied
+    # embeddings; None = faithful per-example clipping only.
+    ghost: Any | None = None
 
 
 @dataclasses.dataclass
@@ -109,6 +113,10 @@ class ArmConfig:
     fused_rounds: bool = True      # cohort-batched round step (DESIGN.md §7)
     participation_rate: float = 1.0  # Poisson cohort subsampling q (population
                                      # backend; 1.0 = everyone, every round)
+    clipping: str = "auto"         # per-example clipping path: "auto" takes
+                                   # ghost when Model.ghost is set, "ghost"
+                                   # demands it (validation error otherwise),
+                                   # "per-example" forces the faithful path
     seed: int = 0
     eval_every: int = 0            # 0 = never
     max_pad_batch: int | None = None  # static padded per-silo batch (jit shapes)
@@ -304,6 +312,19 @@ class RoundArm(Arm):
         """Expected examples participant ``i`` processes in one round (the
         trace phase's compute-time model; actual draws happen at solve)."""
         return min(self.cfg.batch_size, len(self.participants[i]))
+
+    def clipped_grad_sum_fn(self, pad: int):
+        """Model-aware clipped-grad-sum seam (DESIGN.md §12).
+
+        Returns ``fn(params, {"x", "y"}, mask) -> (grad_sum, loss)``: the
+        ghost path for models declaring the capability, the faithful
+        ``dp.per_example_clipped_grad_sum`` otherwise — resolved once at arm
+        construction so the choice is visible in ``clipping_path``.
+        """
+        from repro.arms import clipping as clipping_lib
+
+        self.clipping_path = clipping_lib.resolve(self.model, self.cfg)
+        return clipping_lib.clipped_grad_sum_fn(self.model, self.cfg, pad)
 
     # --- cohort / schedule ---------------------------------------------------
 

@@ -65,13 +65,14 @@ class DeCaPHArm(RoundArm):
             delta=cfg.dp.delta,
         )
         self._key = jax.random.key(cfg.seed)
+        # Model-aware clipped-grad-sum seam (DESIGN.md §12): ghost clipping
+        # for dense decoder stacks declaring the capability, faithful
+        # per-example clipping otherwise.  Noise, keys and accounting are
+        # identical either way — the path only changes how the clipped sum
+        # is computed.
+        clip_fn = self.clipped_grad_sum_fn(self.pad)
         self._clipped_sum = fused.instrumented_jit(
-            lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
-                model.loss_fn, p, b,
-                clip_norm=cfg.dp.clip_norm,
-                microbatch_size=min(cfg.dp.microbatch_size, self.pad),
-                mask=m,
-            )
+            lambda p, b, m: clip_fn(p, b, m)
         )
 
         def cohort_step(params, bx, by, masks, salt_t, idxs, n_shares):
@@ -80,12 +81,7 @@ class DeCaPHArm(RoundArm):
             per-participant path does, so batching changes no draw."""
 
             def one(bx_i, by_i, m_i, idx):
-                g_sum, loss = dp_lib.per_example_clipped_grad_sum(
-                    model.loss_fn, params, {"x": bx_i, "y": by_i},
-                    clip_norm=cfg.dp.clip_norm,
-                    microbatch_size=min(cfg.dp.microbatch_size, self.pad),
-                    mask=m_i,
-                )
+                g_sum, loss = clip_fn(params, {"x": bx_i, "y": by_i}, m_i)
                 nkey = jax.random.fold_in(
                     jax.random.fold_in(self._key, salt_t), idx
                 )

@@ -74,13 +74,14 @@ class PriMIAArm(RoundArm):
         else:
             self.max_rounds = [cfg.rounds] * self.h
         self._key = jax.random.key(cfg.seed)
+        # Same clipped-grad-sum seam as decaph (DESIGN.md §12); the pad hint
+        # only caps the faithful path's microbatch, so keep the configured
+        # microbatch size by passing the largest per-client pad.
+        clip_fn = self.clipped_grad_sum_fn(
+            max(cfg.dp.microbatch_size, *self.pads)
+        )
         self._clipped_sum = fused.instrumented_jit(
-            lambda p, b, m: dp_lib.per_example_clipped_grad_sum(
-                model.loss_fn, p, b,
-                clip_norm=cfg.dp.clip_norm,
-                microbatch_size=cfg.dp.microbatch_size,
-                mask=m,
-            )
+            lambda p, b, m: clip_fn(p, b, m)
         )
 
         def cohort_step(params, bx, by, masks, counts, salt_t, idxs):
@@ -92,12 +93,7 @@ class PriMIAArm(RoundArm):
             real-example count."""
 
             def one(bx_i, by_i, m_i, k_i, idx):
-                g_sum, loss = dp_lib.per_example_clipped_grad_sum(
-                    model.loss_fn, params, {"x": bx_i, "y": by_i},
-                    clip_norm=cfg.dp.clip_norm,
-                    microbatch_size=cfg.dp.microbatch_size,
-                    mask=m_i,
-                )
+                g_sum, loss = clip_fn(params, {"x": bx_i, "y": by_i}, m_i)
                 nkey = jax.random.fold_in(
                     jax.random.fold_in(self._key, salt_t), idx
                 )

@@ -342,25 +342,38 @@ def _chunked(batch: PyTree, n_chunks: int) -> PyTree:
 
 def ghost_clipped_grad_sum(cfg, params, batch, *, clip_norm: float,
                            chunk_size: int | None = None,
-                           constrain_grads=None):
+                           constrain_grads=None, mask=None):
     """Exact clipped-sum gradients in 2 batched passes (no per-example grads).
 
     ``chunk_size`` bounds residual-activation memory: the batch is processed
     in ``B/chunk_size`` scanned chunks (weight gathers scale with the chunk
     count, not the example count — the §Perf win over the faithful path).
 
-    Returns (grad_sum pytree, mean loss, per-example norms).
+    ``mask`` ([B] of {0,1}) drops padding rows: their clip factors are zeroed
+    (so they contribute nothing to the grad sum) and the returned loss is the
+    mask-weighted mean — the same semantics as
+    ``dp.per_example_clipped_grad_sum``, which fused round-steps rely on.
+
+    Returns (grad_sum pytree, mask-weighted mean loss, per-example norms).
     """
     b = batch["tokens"].shape[0]
     chunk = min(chunk_size or b, b)
-    assert b % chunk == 0, "batch must divide ghost chunk size"
+    if b % chunk != 0:  # odd pads fall back to one full-batch chunk
+        chunk = b
     n_chunks = b // chunk
+    if mask is None:
+        mask = jnp.ones((b,), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
 
-    def norms_of_chunk(bchunk):
+    def norms_of_chunk(bchunk, mchunk):
+        # Masking the loss here zeroes pad rows' per-example cotangents, so
+        # their collector contribution vanishes and their norm comes out 0
+        # (pure seed); real rows see cotangent 1.0, identical to unmasked.
         def f(p, coll):
             per_ex, coll_out = forward_ghost(cfg, p, bchunk, coll,
                                              with_norms=True)
-            return jnp.sum(per_ex), coll_out
+            return jnp.sum(per_ex * mchunk), coll_out
 
         coll0 = jnp.zeros((chunk,), jnp.float32)
         (loss_sum, _), vjp_fn = jax.vjp(f, params, coll0)
@@ -379,24 +392,26 @@ def ghost_clipped_grad_sum(cfg, params, batch, *, clip_norm: float,
         return jax.grad(weighted)(params)
 
     if n_chunks == 1:
-        norms, loss_sum = norms_of_chunk(batch)
+        norms, loss_sum = norms_of_chunk(batch, mask)
         factors = jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12))
-        grads = grads_of_chunk(batch, factors)
-        return grads, loss_sum / b, norms
+        grads = grads_of_chunk(batch, factors * mask)
+        return grads, loss_sum / denom, norms
 
     chunks = _chunked(batch, n_chunks)
+    mask_chunks = mask.reshape(n_chunks, chunk)
 
-    def scan_norms(carry, bchunk):
-        norms, loss_sum = norms_of_chunk(bchunk)
+    def scan_norms(carry, args):
+        bchunk, mchunk = args
+        norms, loss_sum = norms_of_chunk(bchunk, mchunk)
         return carry + loss_sum, norms
 
     loss_total, norms_all = jax.lax.scan(
-        scan_norms, jnp.zeros(()), chunks
+        scan_norms, jnp.zeros(()), (chunks, mask_chunks)
     )
     norms = norms_all.reshape(-1)
     factors_all = jnp.minimum(
         1.0, clip_norm / jnp.maximum(norms_all, 1e-12)
-    )
+    ) * mask_chunks
 
     def scan_grads(acc, args):
         bchunk, factors = args
@@ -412,4 +427,4 @@ def ghost_clipped_grad_sum(cfg, params, batch, *, clip_norm: float,
         lambda p: jnp.zeros(p.shape, jnp.float32), params
     )
     grads, _ = jax.lax.scan(scan_grads, zeros, (chunks, factors_all))
-    return grads, loss_total / b, norms
+    return grads, loss_total / denom, norms

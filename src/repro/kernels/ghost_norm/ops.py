@@ -45,11 +45,17 @@ def ghost_norm_blocked(a: jax.Array, g: jax.Array,
 
 
 def ghost_norm(a: jax.Array, g: jax.Array, *, block_s: int = 128,
-               block_t: int = 128, force_kernel: bool = False) -> jax.Array:
+               block_t: int = 128, force_kernel: bool = False,
+               prefer_oracle: bool = False) -> jax.Array:
     """Per-example ghost gradient sq-norms.
 
     TPU -> Pallas kernel; elsewhere -> the blocked XLA equivalent (same
     tiling, bounded memory); ``force_kernel`` runs interpret mode (tests).
+    The naive ``[B, S, S]`` Gram oracle is opt-in via ``prefer_oracle``
+    (debugging only): making it the short-sequence default meant the CPU
+    path exercised a *different* memory profile than the kernel it stands
+    in for, and its full-Gram materialisation dominates host memory exactly
+    where the blocked path is cheapest.
     """
     backend = jax.default_backend()
     if backend == "tpu":
@@ -57,6 +63,6 @@ def ghost_norm(a: jax.Array, g: jax.Array, *, block_s: int = 128,
     if force_kernel:
         return ghost_norm_pallas(a, g, block_s=block_s, block_t=block_t,
                                  interpret=True)
-    if a.ndim == 3 and a.shape[1] <= 512:
+    if prefer_oracle and a.ndim == 3:
         return ghost_norm_ref(a, g)
     return ghost_norm_blocked(a, g)

@@ -1,18 +1,31 @@
 """The ``shard`` backend: SPMD execution of the fused cohort round-step.
 
 This is the registry module that carries the fused hot path (DESIGN.md §7)
-into the SPMD world of ``launch/``: ``ShardedRunner`` builds a 1-D ``data``
-mesh via ``launch.mesh.make_host_data_mesh``, then executes every fused
-cohort program — the exact same traced function the idealized backend jits —
-under GSPMD with explicit placements:
+into the SPMD world of ``launch/``: ``ShardedRunner`` defaults to a 1-D
+``data`` mesh via ``launch.mesh.make_host_data_mesh`` and also accepts the
+full production ``("pod", "data", "model")`` meshes from
+``launch.mesh.make_production_mesh`` / ``make_debug_mesh``; either way it
+executes every fused cohort program — the exact same traced function the
+idealized backend jits — under GSPMD with explicit placements:
 
-  * the stacked cohort batches (``fused.stack_poisson`` output) are sharded
-    along the *example* axis over the mesh's data axes — the cohort pad is
-    rounded up to the data-axis size first, which is free because masks keep
-    pad rows exactly inert;
-  * params (and every other operand: noise salts, cohort index vectors,
-    control-variate stacks) are replicated, matching the
-    ``launch/sharding.py`` fallback rule for non-divisible leaves;
+  * on a 1-D mesh the stacked cohort batches (``fused.stack_poisson``
+    output) are sharded along the *example* axis over the mesh's data axes —
+    the cohort pad is rounded up to the data-axis size first, which is free
+    because masks keep pad rows exactly inert;
+  * on a pod mesh the *hospital* (participant) axis shards over the combined
+    ``("pod", "data")`` axes instead, whenever the cohort size divides them —
+    each pod owns a slice of the federation and the in-jit cohort reduction
+    (DeCaPH's SecAgg-summed aggregate) lowers to cross-pod all-reduces, never
+    a host gather.  The participant axis is NEVER padded: a padded slot would
+    add a phantom per-participant noise share.  Non-divisible cohorts fall
+    back to the example-axis rule above;
+  * on meshes with a ``model`` axis, model-parallel params shard over
+    ``("model",)`` per the ``launch/sharding.py`` logical-axis rules
+    (mlp/qheads/kv_heads/vocab → "model"; tabular params have no encoded
+    axes and stay replicated);
+  * every other operand (noise salts, cohort index vectors, control-variate
+    stacks) is replicated, matching the ``launch/sharding.py`` fallback rule
+    for non-divisible leaves;
   * outputs get explicit replicated out-shardings: the per-participant
     payload stacks and the in-jit reduced aggregate come back whole, so the
     arm's eager aggregation math is identical to the idealized backend's.
@@ -49,6 +62,7 @@ from repro.arms.backends import (
 )
 from repro.arms.runners import LocalRunner
 from repro.launch.mesh import data_axes, make_host_data_mesh
+from repro.launch.sharding import ShardingPolicy, param_specs
 
 _DEVICE_HINT = (
     "needs >= 2 XLA devices; on CPU launch with "
@@ -71,11 +85,20 @@ class MeshExecutor:
         self.mesh = mesh
         axes = data_axes(mesh)
         self._axis_entry = axes if len(axes) > 1 else axes[0]
+        self._pod_mesh = len(axes) > 1  # ("pod","data",...) production shape
         self.data_size = int(np.prod([mesh.shape[a] for a in axes]))
         self._replicated = NamedSharding(mesh, P())
-        self._marks: dict[int, tuple[np.ndarray, NamedSharding]] = {}
+        # model-parallel param placement (pod meshes): TP only — FSDP would
+        # split the embed dim over the same axes that carry hospitals
+        self._param_policy = (
+            ShardingPolicy(fsdp=False, tp=True)
+            if "model" in mesh.axis_names else None
+        )
+        self._marks: dict[int, tuple[Any, NamedSharding]] = {}
         self._staged: dict[Any, Any] = {}
         self.sharded_puts = 0  # placements that actually split an axis
+        self.participant_shards = 0  # cohorts split over ("pod","data")
+        self.param_shards = 0  # param leaves placed over ("model",)
 
     # -- hooks consumed by repro.arms.fused -----------------------------------
 
@@ -84,12 +107,41 @@ class MeshExecutor:
         return -(-pad // self.data_size) * self.data_size
 
     def mark(self, arr: np.ndarray, axis: int) -> None:
-        """Declare ``arr`` a cohort batch to shard along ``axis``."""
+        """Declare ``arr`` a cohort batch to shard along ``axis``.
+
+        Pod meshes prefer splitting the *participant* axis (0) over the
+        combined ``("pod","data")`` axes — but only when the cohort size
+        divides them exactly: unlike the example axis (mask-inert pad rows),
+        a padded participant slot would draw its own DP noise share, so the
+        fallback is the example-axis split, never padding.
+        """
+        if self._pod_mesh and arr.shape[0] % self.data_size == 0:
+            spec = P(*[self._axis_entry if d == 0 else None
+                       for d in range(arr.ndim)])
+            self._marks[id(arr)] = (arr, NamedSharding(self.mesh, spec))
+            self.participant_shards += 1
+            return
         if arr.shape[axis] % self.data_size:
             return  # replication fallback (same rule as launch/sharding.py)
         spec = P(*[self._axis_entry if d == axis else None
                    for d in range(arr.ndim)])
         self._marks[id(arr)] = (arr, NamedSharding(self.mesh, spec))
+
+    def mark_params(self, params) -> None:
+        """Declare model params for TP placement over the ``model`` axis.
+
+        No-op on meshes without a ``model`` axis.  Leaves whose keys encode
+        no shardable logical axes (all tabular models) resolve to replicated
+        specs and are skipped — placement falls through to the default.
+        """
+        if self._param_policy is None:
+            return
+        specs = param_specs(params, self.mesh, self._param_policy)
+        for leaf, sh in zip(jax.tree_util.tree_leaves(params),
+                            jax.tree_util.tree_leaves(specs)):
+            if sh.spec != P(*([None] * leaf.ndim)):
+                self._marks[id(leaf)] = (leaf, sh)
+                self.param_shards += 1
 
     def begin_round(self) -> None:
         self._marks.clear()
@@ -171,6 +223,7 @@ class ShardedRunner(LocalRunner):
     def _fused_round(self, arm, params, active, t, rng, *,
                      need_payloads, need_reduced):
         self.executor.begin_round()
+        self.executor.mark_params(params)
         with fused.execution_context(self.executor):
             fr = super()._fused_round(arm, params, active, t, rng,
                                       need_payloads=need_payloads,

@@ -11,7 +11,10 @@ def make_production_mesh(*, multi_pod: bool = False):
 
     Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
     DeCaPH maps hospitals onto ("pod", "data") — the secure-aggregation sum is
-    the gradient reduction over those axes (DESIGN.md §3).
+    the gradient reduction over those axes (DESIGN.md §3).  The `shard`
+    backend accepts these meshes directly
+    (``ShardedRunner(mesh=make_production_mesh(multi_pod=True))``): hospitals
+    shard over ("pod", "data"), model-parallel params over ("model",).
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

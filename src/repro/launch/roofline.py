@@ -265,6 +265,98 @@ def model_flops(cfg, shape: dict, kind: str) -> float:
     return 2.0 * n_active * b  # one token per sequence
 
 
+def ghost_norm_flops(b: int, s: int, d_in: int, d_out: int) -> float:
+    """FLOPs of one ghost-norm collector site ``||A^T G||_F^2`` per example.
+
+    The Gram identity costs two [B,S,S] batched matmuls (2·B·S²·d each) plus
+    the elementwise product-reduce (2·B·S²) — what the Pallas kernel (and
+    the blocked XLA path) actually execute, tile by tile.
+    """
+    return float(b) * s * s * (2.0 * (d_in + d_out) + 2.0)
+
+
+def _ghost_collector_sites(cfg) -> list[tuple[int, int]]:
+    """(d_in, d_out) of every per-layer dense collector site + the head."""
+    d, hd = cfg.d_model, cfg.head_dim
+    per_layer = [
+        (d, cfg.n_heads * hd),            # wq
+        (d, cfg.n_kv_heads * hd),         # wk
+        (d, cfg.n_kv_heads * hd),         # wv
+        (cfg.n_heads * hd, d),            # wo
+        (d, cfg.d_ff),                    # w_up
+        (cfg.d_ff, d),                    # w_down
+    ]
+    if cfg.ffn_kind in ("swiglu", "geglu"):
+        per_layer.append((d, cfg.d_ff))   # w_gate
+    return per_layer * cfg.n_layers + [(d, cfg.vocab_size)]  # + head
+
+
+def dp_round_flops(cfg, *, cohort: int, batch_per_silo: int, seq_len: int,
+                   clipping: str = "ghost") -> float:
+    """Analytic FLOPs of one fused DP round over the cohort.
+
+    Faithful per-example clipping is one fwd+bwd per example (6·N·tokens
+    total — its cost problem is the per-example gradient *memory traffic*,
+    not FLOPs).  The ghost path runs TWO batched passes (norms, then the
+    factor-weighted grad: 12·N·tokens) plus the ghost-norm Gram contractions
+    at every collector site — more arithmetic, no per-example gradients,
+    which is exactly the trade the roofline makes visible: ghost moves the
+    round from the memory roof toward the compute roof.
+    """
+    from repro.configs.base import active_param_count
+
+    n_active = active_param_count(cfg)
+    tokens = float(cohort) * batch_per_silo * seq_len
+    if clipping != "ghost":
+        return 6.0 * n_active * tokens
+    collector = sum(
+        ghost_norm_flops(cohort * batch_per_silo, seq_len, di, do)
+        for di, do in _ghost_collector_sites(cfg)
+    )
+    return 12.0 * n_active * tokens + collector
+
+
+def dp_round_roofline(cfg, *, cohort: int, batch_per_silo: int,
+                      seq_len: int, wall_seconds: float | None = None,
+                      clipping: str = "ghost", n_chips: int = 1) -> dict:
+    """%-of-roofline terms for one measured fused DP round.
+
+    ``pct_of_roofline`` is the analytic round FLOPs over the measured wall
+    clock, as a percentage of ``n_chips`` worth of TPU-v5e peak — on a CPU
+    host this is a *hardware-model* figure (how far the measured round sits
+    from what the TPU roofline allows), the same convention the serve-tier
+    BENCH rows use.  ``per_example_grad_bytes`` is the faithful path's
+    per-example gradient materialisation floor (read+write), the traffic
+    the ghost path deletes.
+    """
+    from repro.configs.base import active_param_count
+
+    flops = dp_round_flops(cfg, cohort=cohort, batch_per_silo=batch_per_silo,
+                           seq_len=seq_len, clipping=clipping)
+    n_active = active_param_count(cfg)
+    # HBM floor: one param read + one grad-sum write for either path (8N);
+    # the faithful path additionally writes then re-reads one full gradient
+    # per example (8NB) — the traffic the ghost path deletes, and what makes
+    # the faithful round memory-bound on the TPU roofline as B grows.
+    grad_bytes = (0.0 if clipping == "ghost"
+                  else 2.0 * 4.0 * n_active * cohort * batch_per_silo)
+    hbm_bytes = 2.0 * 4.0 * n_active + grad_bytes
+    terms = roofline_terms(flops=flops, hbm_bytes=hbm_bytes,
+                           coll_bytes=0.0, n_chips=n_chips)
+    out = {
+        "round_flops": flops,
+        "per_example_grad_bytes": grad_bytes,
+        "roofline_round_s": max(terms["compute_s"], terms["memory_s"]),
+        "roofline_bottleneck": terms["bottleneck"],
+        "clipping": clipping,
+    }
+    if wall_seconds is not None:
+        achieved = flops / max(wall_seconds, 1e-12)
+        out["achieved_flops_per_s"] = achieved
+        out["pct_of_roofline"] = 100.0 * achieved / (n_chips * PEAK_FLOPS)
+    return out
+
+
 def analyze_compiled(compiled, lowered=None) -> dict[str, Any]:
     """Extract corrected totals + raw cost/memory analysis from a compiled
     executable."""

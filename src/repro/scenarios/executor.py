@@ -74,13 +74,16 @@ def build_scenario(spec: ScenarioSpec):
     arm_cls = arms.get(spec.arm)  # validates the arm name early
     backend_info = backends_lib.get_backend(spec.backend).info
     model = presets_lib.build_model(spec)
-    silos = arms.normalize_participants(presets_lib.build_silos(spec))
+    silos = presets_lib.build_silos(spec)
+    if presets_lib.normalizes(spec.task):
+        silos = arms.normalize_participants(silos)
     cfg = arms.ArmConfig(
         rounds=spec.rounds, batch_size=spec.batch_size, lr=spec.lr,
         seed=spec.seed, use_secagg=spec.use_secagg,
         fl_local_steps=spec.fl_local_steps, fedprox_mu=spec.fedprox_mu,
         epsilon_budget=spec.epsilon_budget,
         participation_rate=spec.participation_rate,
+        clipping=spec.clipping,
         dp=DPConfig(clip_norm=spec.clip_norm,
                     noise_multiplier=spec.noise_multiplier,
                     microbatch_size=spec.microbatch_size),

@@ -186,9 +186,32 @@ def population_scaling() -> SweepGrid:
     )
 
 
+def capacity_lm() -> SweepGrid:
+    """The transformer capacity column (DESIGN.md §12): decaph over the
+    "lm" model-size ladder, ghost vs faithful per-example clipping, on the
+    idealized backend.  The wall-clock story lives in
+    ``benchmarks/hotpath.py --capacity`` (BENCH_capacity.json); this sweep
+    carries the utility-vs-ε side at the same cells.
+    """
+    base = ScenarioSpec(
+        name="capacity-lm", task="lm", model_size="small",
+        hospitals=4, examples=96, rounds=4, batch_size=16, lr=0.1,
+        backend="ideal", use_secagg=False, microbatch_size=8,
+    )
+    return SweepGrid(
+        "capacity-lm",
+        base,
+        {
+            "model_size": ["small", "medium", "full"],
+            "clipping": ["ghost", "per-example"],
+        },
+    )
+
+
 SWEEPS: dict[str, Callable[[], SweepGrid]] = {
     "capacity-mini": capacity_mini,
     "capacity": capacity,
+    "capacity-lm": capacity_lm,
     "model-scaling": model_scaling,
     "smoke-2x2": smoke_2x2,
     "backend-matrix": backend_matrix,

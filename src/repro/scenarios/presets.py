@@ -77,10 +77,55 @@ _FEATURES: dict[tuple[str, str], int] = {
     ("xray", "small"): 16,
     ("xray", "medium"): 24,
     ("xray", "full"): 32,
+    # LM: feature = sequence length
+    ("lm", "small"): 16,
+    ("lm", "medium"): 32,
+    ("lm", "full"): 64,
 }
 
 N_PANCREAS_TYPES = 4
 N_XRAY_LABELS = 4
+
+# Transformer ladder for the "lm" task: dense decoder stacks (smollm-family
+# smoke config rescaled), untied embeddings so the ghost clipping path is
+# exact and the GhostCapability attaches (DESIGN.md §12).  Head/FFN/vocab
+# dims stay divisible by the debug pod mesh's model extent (2) so TP
+# sharding engages on the shard backend.
+_LM_DIMS: dict[str, dict] = {
+    "small": dict(d_model=64, n_layers=2, n_heads=2, n_kv_heads=1,
+                  head_dim=32, d_ff=128, vocab_size=256),
+    "medium": dict(d_model=128, n_layers=2, n_heads=4, n_kv_heads=2,
+                   head_dim=32, d_ff=256, vocab_size=512),
+    "full": dict(d_model=256, n_layers=4, n_heads=8, n_kv_heads=4,
+                 head_dim=32, d_ff=512, vocab_size=1024),
+}
+
+
+def lm_model_config(model_size: str):
+    """The transformer ModelConfig behind an "lm" preset size."""
+    from repro.configs import get_smoke_config
+    from repro.configs.base import dense_stack
+
+    dims = dict(_LM_DIMS[model_size])
+    n_layers = dims.pop("n_layers")
+    return get_smoke_config("smollm-360m").replace(
+        n_layers=n_layers, stack=dense_stack(n_layers),
+        tie_embeddings=False, **dims,
+    )
+
+
+def lm_seq_len(model_size: str) -> int:
+    """The "lm" preset's sequence length for a model size (feature ladder)."""
+    return _FEATURES[("lm", model_size)]
+
+
+def normalizes(task: str) -> bool:
+    """Whether the task's silos go through ``normalize_participants``.
+
+    Token ids are categorical — feature-standardising them would destroy
+    the data — so the "lm" task opts out.
+    """
+    return task != "lm"
 
 
 def default_features(task: str, model_size: str) -> int:
@@ -95,6 +140,10 @@ def build_model(spec: ScenarioSpec):
     """The preset model for ``spec`` (paper architectures at three scales)."""
     from repro.models import tabular
 
+    if spec.task == "lm":
+        from repro.serve.federation import transformer_model
+
+        return transformer_model(lm_model_config(spec.model_size))
     f = resolved_features(spec)
     if spec.task == "gemini":
         if spec.model_size == "small":
@@ -128,6 +177,14 @@ def build_silos(spec: ScenarioSpec):
     from repro.data import synthetic
 
     f = resolved_features(spec)
+    if spec.task == "lm":
+        from repro.serve.federation import token_silos
+
+        return token_silos(
+            lm_model_config(spec.model_size), hospitals=spec.hospitals,
+            n_per=max(1, spec.examples // spec.hospitals), seq_len=f,
+            seed=spec.seed,
+        )
     if spec.task == "gemini":
         return synthetic.make_gemini_like(
             seed=spec.seed, n_total=spec.examples, n_silos=spec.hospitals,
@@ -146,6 +203,21 @@ def build_silos(spec: ScenarioSpec):
 
 def pooled_metric(spec: ScenarioSpec, model, params, silos) -> float:
     """Task-appropriate pooled utility in [0, 1]."""
+    if spec.task == "lm":              # pooled next-token accuracy
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.models import transformer as tf
+
+        cfg = lm_model_config(spec.model_size)
+        x = np.concatenate([p.x for p in silos])
+        y = np.concatenate([p.y for p in silos])
+        logits, _aux = tf.forward(
+            cfg, params, {"tokens": jnp.asarray(x, jnp.int32)}
+        )
+        pred = np.asarray(jnp.argmax(logits, axis=-1))
+        mask = y >= 0
+        return float((pred[mask] == y[mask]).mean())
     if spec.task == "pancreas":        # multiclass: argmax accuracy
         import jax.numpy as jnp
         import numpy as np
@@ -191,9 +263,14 @@ _EXAMPLES = {
     ("xray", "small"): 300,
     ("xray", "medium"): 600,
     ("xray", "full"): 1800,
+    ("lm", "small"): 96,
+    ("lm", "medium"): 128,
+    ("lm", "full"): 192,
 }
 
-_HOSPITALS = {"gemini": 8, "pancreas": 5, "xray": 3}  # paper silo counts
+# paper silo counts; lm = 4 so cohorts divide the debug pod mesh's
+# ("pod", "data") extent and the hospital axis shards across pods
+_HOSPITALS = {"gemini": 8, "pancreas": 5, "xray": 3, "lm": 4}
 
 
 def _case_study_presets() -> dict[str, ScenarioSpec]:
@@ -214,6 +291,14 @@ def _case_study_presets() -> dict[str, ScenarioSpec]:
 def all_presets() -> dict[str, ScenarioSpec]:
     """All named presets (fresh spec objects each call)."""
     out = _case_study_presets()
+    for size in ("small", "medium", "full"):
+        name = f"lm-{size}"
+        out[name] = ScenarioSpec(
+            name=name, task="lm", model_size=size,
+            hospitals=_HOSPITALS["lm"], examples=_EXAMPLES[("lm", size)],
+            rounds=8, batch_size=16, lr=0.1, use_secagg=False,
+            tags=("case-study", "lm", size, "transformer"),
+        )
     out["gemini-5hospital"] = ScenarioSpec(
         name="gemini-5hospital", task="gemini", model_size="small",
         hospitals=5, examples=1200, rounds=12, batch_size=64, lr=0.4,

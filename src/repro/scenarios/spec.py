@@ -28,11 +28,12 @@ import hashlib
 import json
 from typing import Any, Mapping
 
-TASKS = ("gemini", "pancreas", "xray")
+TASKS = ("gemini", "pancreas", "xray", "lm")
 MODEL_SIZES = ("small", "medium", "full")
+CLIPPING_MODES = ("auto", "ghost", "per-example")
 
 # bump when the semantics of a field change so stale entries never alias
-SPEC_SCHEMA = 2  # v2: participation_rate + population joined the key
+SPEC_SCHEMA = 3  # v3: the "lm" task + the clipping field joined the key
 
 # label-only fields, excluded from the cache key
 _UNHASHED_FIELDS = ("name", "tags")
@@ -60,6 +61,9 @@ class ScenarioSpec:
     microbatch_size: int = 8
     epsilon_budget: float | None = None
     use_secagg: bool = True
+    # per-example clipping path (DESIGN.md §12): "auto" takes the ghost path
+    # exactly when the model declares the capability (dense decoder stacks)
+    clipping: str = "auto"
     # arm knobs (ignored by arms that do not use them)
     fl_local_steps: int = 1
     fedprox_mu: float = 0.1
@@ -123,6 +127,10 @@ class ScenarioSpec:
         if self.model_size not in MODEL_SIZES:
             raise ValueError(
                 f"model_size {self.model_size!r} not in {MODEL_SIZES}"
+            )
+        if self.clipping not in CLIPPING_MODES:
+            raise ValueError(
+                f"clipping {self.clipping!r} not in {CLIPPING_MODES}"
             )
         if not self.arm or not isinstance(self.arm, str):
             raise ValueError("arm must be a non-empty registry name")

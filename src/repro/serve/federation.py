@@ -34,13 +34,19 @@ from repro.serve.handoff import CheckpointPublisher
 __all__ = ["transformer_model", "token_silos", "train_and_publish"]
 
 
-def transformer_model(model_cfg) -> arms.Model:
+def transformer_model(model_cfg, *, ghost_chunk: int | None = None) -> arms.Model:
     """The transformer stack as an ``arms.Model`` (per-example loss).
 
     Arms call ``loss_fn(params, ex)`` under ``vmap`` with ``ex = {"x", "y"}``
     one example per call: ``x`` is a token sequence ``[S] int32``, ``y`` the
     shifted labels (``-1`` = masked).  Padded rows are zero-weighted by the
     arm's mask, so the all-zeros pad examples never contribute.
+
+    Dense decoder stacks with untied embeddings additionally declare the
+    ghost-clipping capability (DESIGN.md §12): DP arms then compute their
+    per-example-clipped gradient sums via ``core.ghost`` — exact norms, no
+    per-example gradients — instead of vmapping ``loss_fn``.  ``ghost_chunk``
+    bounds the ghost path's residual-activation memory per silo batch.
     """
 
     def init_fn(key):
@@ -59,7 +65,15 @@ def transformer_model(model_cfg) -> arms.Model:
         )
         return jnp.argmax(logits[:, -1], axis=-1)
 
-    return arms.Model(init_fn, loss_fn, predict_fn)
+    from repro.core import ghost as ghost_lib
+
+    cap = None
+    if ghost_lib._supported(model_cfg) and not model_cfg.tie_embeddings:
+        # tied heads make the ghost head term an upper bound, not exact —
+        # those configs (and MoE/SSM stacks, which mix examples inside a
+        # dispatch) stay on the faithful per-example path.
+        cap = arms.GhostCapability(model_cfg, chunk_size=ghost_chunk)
+    return arms.Model(init_fn, loss_fn, predict_fn, ghost=cap)
 
 
 def token_silos(

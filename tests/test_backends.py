@@ -190,3 +190,102 @@ def test_shard_matches_ideal_within_documented_tolerance():
         assert cell["epsilon"][0] == pytest.approx(cell["epsilon"][1]), name
         assert cell["sharded_puts"] > 0, name  # SPMD actually engaged
         assert cell["backend_label"] == "shard"
+
+
+_POD_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import json
+import numpy as np
+import jax
+
+import repro.arms as arms
+from repro.configs import get_smoke_config
+from repro.core.dp import DPConfig
+from repro.data.synthetic import make_gemini_like
+from repro.models.tabular import linear_model
+from repro.launch.federated import ShardedRunner
+from repro.launch.mesh import make_debug_mesh
+from repro.serve.federation import token_silos, transformer_model
+
+assert jax.device_count() == 8
+mesh = make_debug_mesh(n_data=2, n_model=2, multi_pod=True)  # (2, 2, 2)
+
+cfg_m = dataclasses.replace(get_smoke_config("smollm-360m"),
+                            tie_embeddings=False)
+lm_model = transformer_model(cfg_m)
+# 4 hospitals divide the ("pod", "data") extent (2*2), so the participant
+# axis genuinely splits across pods
+lm_silos = token_silos(cfg_m, hospitals=4, n_per=16, seq_len=12, seed=0)
+tab_model = linear_model(8)
+tab_silos = arms.normalize_participants(
+    make_gemini_like(seed=0, n_total=720, n_silos=4, n_features=8)
+)
+
+results = {}
+cells = [
+    ("decaph-lm-ghost", "decaph", lm_model, lm_silos, {"clipping": "ghost"}),
+    ("decaph-lm-faithful", "decaph", lm_model, lm_silos,
+     {"clipping": "per-example"}),
+    ("decaph-tabular", "decaph", tab_model, tab_silos, {}),
+]
+for label, name, model, silos, extra in cells:
+    cfg = arms.ArmConfig(
+        rounds=3, batch_size=16, lr=0.1, seed=0, use_secagg=False,
+        dp=DPConfig(clip_norm=1.0, noise_multiplier=0.8, microbatch_size=8),
+        **extra,
+    )
+    ideal = arms.run(name, model, silos, cfg)
+    runner = ShardedRunner(mesh=mesh)
+    shard = runner.run(arms.get(name)(model, silos, cfg))
+    la = jax.tree_util.tree_leaves(ideal.params)
+    lb = jax.tree_util.tree_leaves(shard.params)
+    results[label] = {
+        "max_abs_diff": max(
+            float(np.abs(np.asarray(a) - np.asarray(b)).max())
+            for a, b in zip(la, lb)
+        ),
+        "rounds": [ideal.rounds_completed, shard.rounds_completed],
+        "epsilon": [float(ideal.epsilon), float(shard.epsilon)],
+        "sharded_puts": runner.executor.sharded_puts,
+        "participant_shards": runner.executor.participant_shards,
+        "param_shards": runner.executor.param_shards,
+        "backend_label": shard.backend,
+    }
+print("RESULTS" + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_pod_mesh_shard_matches_ideal():
+    """("pod","data","model") mesh cells pass the same atol-1e-5 contract.
+
+    Transformer cells must split the hospital axis over ("pod","data")
+    (participant_shards > 0, never padded) and place model-parallel params
+    over ("model",) (param_shards > 0); the tabular cell rides the same mesh
+    with every param replicated (no encoded logical axes).
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _POD_MESH_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    payload = [ln for ln in proc.stdout.splitlines()
+               if ln.startswith("RESULTS")][0]
+    report = json.loads(payload[len("RESULTS"):])
+    assert set(report) == {"decaph-lm-ghost", "decaph-lm-faithful",
+                           "decaph-tabular"}
+    for label, cell in report.items():
+        assert cell["rounds"][0] == cell["rounds"][1], label
+        assert cell["max_abs_diff"] <= 1e-5, (label, cell)
+        assert cell["epsilon"][0] == pytest.approx(cell["epsilon"][1]), label
+        assert cell["sharded_puts"] > 0, label
+        assert cell["participant_shards"] > 0, label  # pods own cohort slices
+        assert cell["backend_label"] == "shard", label
+        if label.startswith("decaph-lm"):
+            assert cell["param_shards"] > 0, label  # TP over ("model",)
+        else:
+            assert cell["param_shards"] == 0, label  # tabular: replicated

@@ -87,6 +87,43 @@ def test_decode_attention_sweep(b, l, h, kv, d, index, window, bk, dtype):
     )
 
 
+@pytest.mark.parametrize(
+    "b,s,din,dout,block",
+    [
+        (2, 96, 48, 16, 64),    # pad branch: 96 % 64 != 0
+        (1, 100, 32, 48, 64),   # pad branch, non-square d_in != d_out
+        (3, 130, 16, 8, 32),    # pad branch, multiple tiles before the pad
+        (2, 64, 32, 16, 64),    # exact tiling (no pad) for contrast
+    ],
+)
+def test_ghost_norm_dispatch_paths_agree(b, s, din, dout, block):
+    """blocked == oracle == Pallas-interpret, including the pad branch.
+
+    The blocked path's ``s % block != 0`` zero-padding and the Pallas
+    kernel's own tile padding must both be invisible: zeros contribute
+    nothing to the Gram products.
+    """
+    from repro.kernels.ghost_norm.ops import ghost_norm, ghost_norm_blocked
+
+    a = _rand((b, s, din), jnp.float32, 11)
+    g = _rand((b, s, dout), jnp.float32, 12, scale=0.1)
+    oracle = ghost_norm_ref(a, g)
+    blocked = ghost_norm_blocked(a, g, block=block)
+    interp = ghost_norm_pallas(a, g, block_s=block, block_t=block,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(oracle),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(interp), np.asarray(oracle),
+                               rtol=2e-5, atol=2e-5)
+    # public dispatch: blocked is the CPU default now, the full-Gram oracle
+    # is opt-in — both must agree with the oracle's numbers
+    np.testing.assert_allclose(np.asarray(ghost_norm(a, g)),
+                               np.asarray(oracle), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(ghost_norm(a, g, prefer_oracle=True)),
+        np.asarray(oracle), rtol=1e-6, atol=1e-6)
+
+
 def test_ghost_norm_matches_outer_product_norms():
     """Cross-check vs literally materialised per-example weight grads."""
     b, s, din, dout = 3, 16, 8, 5
