@@ -34,11 +34,12 @@ Entry schema (JSONL, one object per line — DESIGN.md §11):
 
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import threading
 from typing import Iterable, Mapping, Sequence
+
+from repro.canon import content_hash
 
 GENESIS = "0" * 16
 
@@ -48,8 +49,7 @@ LEDGER_SCHEMA = 1
 def entry_id(record: Mapping) -> str:
     """Content hash of one entry (minus its own ``id``) — graph.py style."""
     material = {k: v for k, v in record.items() if k != "id"}
-    canon = json.dumps(material, sort_keys=True, separators=(",", ":"))
-    return hashlib.sha256(canon.encode()).hexdigest()[:16]
+    return content_hash(material)
 
 
 class LedgerError(ValueError):

@@ -21,9 +21,10 @@ Stdlib-only: the trace phase must never pay the JAX import.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import json
 from typing import Iterable
+
+from repro.canon import bytes_hash, canonical_json_bytes, content_hash
 
 KINDS = ("train", "aggregate", "eval")
 
@@ -51,8 +52,7 @@ class TraceNode:
 
 def _node_id(record: dict) -> str:
     material = {k: v for k, v in record.items() if k != "id"}
-    canon = json.dumps(material, sort_keys=True, separators=(",", ":"))
-    return hashlib.sha256(canon.encode()).hexdigest()[:16]
+    return content_hash(material)
 
 
 class ComputeGraph:
@@ -124,11 +124,10 @@ class ComputeGraph:
     def to_json_bytes(self) -> bytes:
         """THE canonical byte encoding (determinism contract target)."""
         payload = {"schema": 1, "nodes": [n.record() for n in self.nodes]}
-        return json.dumps(payload, sort_keys=True,
-                          separators=(",", ":")).encode()
+        return canonical_json_bytes(payload)
 
     def graph_hash(self) -> str:
-        return hashlib.sha256(self.to_json_bytes()).hexdigest()[:20]
+        return bytes_hash(self.to_json_bytes(), chars=20)
 
     @classmethod
     def from_json_bytes(cls, raw: bytes) -> "ComputeGraph":

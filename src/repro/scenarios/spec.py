@@ -24,9 +24,10 @@ first spec construction instead of the first sweep expansion.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import json
 from typing import Any, Mapping
+
+from repro.canon import content_hash
 
 TASKS = ("gemini", "pancreas", "xray", "lm")
 MODEL_SIZES = ("small", "medium", "full")
@@ -188,6 +189,4 @@ class ScenarioSpec:
         return d
 
     def spec_hash(self) -> str:
-        canon = json.dumps(self.hash_material(), sort_keys=True,
-                           separators=(",", ":"))
-        return hashlib.sha256(canon.encode()).hexdigest()[:20]
+        return content_hash(self.hash_material(), chars=20)
