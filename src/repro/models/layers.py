@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from typing import Any, Callable
 
 import jax
@@ -60,7 +61,10 @@ def dense_init(key, d_in: int, shape, dtype):
 # Sharding context — annotations become no-ops without an active mesh.
 # ---------------------------------------------------------------------------
 
-_ACTIVE_RULES: dict | None = None
+# Per-thread: the serve trainer thread and the decode loop both build
+# models concurrently, and one thread's mesh rules must not leak into
+# (or get clobbered by) the other's unwind.
+_SHARDING = threading.local()
 
 
 class activation_sharding:
@@ -70,14 +74,12 @@ class activation_sharding:
         self.rules = rules
 
     def __enter__(self):
-        global _ACTIVE_RULES
-        self._prev = _ACTIVE_RULES
-        _ACTIVE_RULES = self.rules
+        self._prev = getattr(_SHARDING, "rules", None)
+        _SHARDING.rules = self.rules
         return self
 
     def __exit__(self, *exc):
-        global _ACTIVE_RULES
-        _ACTIVE_RULES = self._prev
+        _SHARDING.rules = self._prev
         return False
 
 
@@ -88,7 +90,7 @@ def shard(x: jax.Array, *axes: str | None) -> jax.Array:
     (e.g. attn_batch over ("data","model") suppresses heads -> "model"),
     and dims not divisible by their mesh extent fall back to replication.
     """
-    rules = _ACTIVE_RULES
+    rules = getattr(_SHARDING, "rules", None)
     if rules is None:
         return x
     import numpy as _np
