@@ -246,7 +246,7 @@ class Topology:
             raise ValueError(f"need 2 <= k < n, got k={k}, n={n}")
         if not 0.0 <= p <= 1.0:
             raise ValueError(f"rewire probability must be in [0, 1], got {p}")
-        rng = random.Random(seed)
+        rng = random.Random(f"{seed}:smallworld-rewire")
         edges: set[tuple[int, int]] = set()
         for i in range(n):
             for step in range(1, k // 2 + 1):
