@@ -112,6 +112,7 @@ def solve(
     import jax  # deferred: the trace phase never pays this import
 
     cfg = arm.cfg
+    # repro: allow[nondeterminism] host wall metric, reported beside (never inside) content-addressed records
     t0 = time.time()
     params = arm.init_params()
     from repro.core import dp as dp_lib
@@ -212,7 +213,7 @@ def solve(
 
     report = SolveReport(
         simulated_seconds=trace.wall_clock,
-        wall_seconds=time.time() - t0,
+        wall_seconds=time.time() - t0,  # repro: allow[nondeterminism] host wall metric, reported beside (never inside) content-addressed records
         rounds_planned=len(trace.rounds),
         rounds_completed=completed,
         lost_rounds=trace.lost_rounds + solve_lost,
