@@ -1,0 +1,32 @@
+"""repro.analysis — contract-aware static analysis for the repro tree.
+
+A stdlib-``ast`` rule engine (DESIGN.md §13) that machine-checks the
+invariants the rest of the repo is built on: PRNG key discipline,
+one-host-sync-per-round, noise accounting, lock coverage of
+thread-shared state, canonical hashing, and (spec, seed) determinism.
+Scopes like "the fused hot path" and "serve-thread-reachable modules"
+are computed from a module-import + call graph, never hand-listed.
+
+Run it: ``python -m repro.analysis src tests benchmarks --fail-on-new``.
+"""
+
+from repro.analysis.engine import (
+    AnalysisResult,
+    FileContext,
+    Rule,
+    all_rules,
+    register_rule,
+    run_analysis,
+)
+from repro.analysis.findings import Finding, Suppression
+
+__all__ = [
+    "AnalysisResult",
+    "FileContext",
+    "Finding",
+    "Rule",
+    "Suppression",
+    "all_rules",
+    "register_rule",
+    "run_analysis",
+]

@@ -1,0 +1,12 @@
+"""Rule modules register themselves on import — registry-style, like
+``repro.arms`` and ``repro.arms.backends``: adding a rule is one module
+with one ``@register_rule`` class, plus its DESIGN.md §13 entry."""
+
+from repro.analysis.rules import (  # noqa: F401
+    determinism,
+    hashing,
+    hostsync,
+    locking,
+    noise,
+    prng,
+)

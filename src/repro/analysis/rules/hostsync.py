@@ -1,0 +1,93 @@
+"""host-sync-hygiene: the §7 one-sync-per-round contract, machine-checked.
+
+The fused cohort round-step is ONE jit dispatch plus ONE host sync per
+round (DESIGN.md §7; `benchmarks/hotpath.py` certifies the dispatch half
+in CI).  The sync half was only spot-tested: any ``.item()``,
+``jax.device_get``, ``block_until_ready``, ``float(array)`` or
+``np.asarray(device_array)`` that creeps into code reachable from a
+``fused_round`` silently serialises the device pipeline once per call
+site — the exact regression class PR 4 removed.
+
+Scope is *computed*: every def reachable through the call graph from any
+``fused_round`` definition (``ModuleIndex.hot_path_scope``), minus the
+sanctioned sync points — ``repro.arms.fused:build_contributions`` is THE
+one host sync the contract allows.
+
+Heuristics, chosen so host-side cohort bookkeeping stays quiet:
+``np.asarray`` with an explicit dtype argument constructs host data
+(``np.asarray(active, np.int32)``) and is not flagged — a device->host
+sync never passes a dtype; ``float()`` of constants, ``len(...)``, or
+string literals is host arithmetic, not a sync.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import FileContext, Rule, register_rule
+from repro.analysis.findings import Finding
+from repro.analysis.graphs import ModuleIndex
+
+# the sanctioned sync points (§7): one host transfer per round, here only
+WHITELIST = frozenset({
+    "repro.arms.fused:build_contributions",
+})
+
+_SYNC_DOTTED = frozenset({"jax.device_get", "numpy.asarray"})
+_SYNC_METHODS = frozenset({"item", "block_until_ready"})
+
+
+@register_rule
+class HostSyncHygiene(Rule):
+    id = "host-sync-hygiene"
+    contract = ("no device->host sync inside code reachable from a "
+                "fused_round, except the sanctioned sync points")
+    design = "§13.2"
+
+    def check_file(self, ctx: FileContext, index: ModuleIndex) -> Iterator[Finding]:
+        scope = index.hot_path_scope() - WHITELIST
+        in_file = [index.defs[fid] for fid in scope
+                   if fid in index.defs and index.defs[fid].path == ctx.rel]
+        for info in in_file:
+            for node in ast.walk(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                # skip nested defs that are themselves whitelisted? nested
+                # defs are separate index entries only if reachable; the
+                # walk here deliberately includes closures defined inline —
+                # they run inside the same dispatch region.
+                dotted = ctx.dotted(node.func)
+                if dotted in _SYNC_DOTTED:
+                    if dotted == "numpy.asarray" and (
+                            len(node.args) > 1 or node.keywords):
+                        continue  # dtype given: host-data construction
+                    yield ctx.finding(
+                        self, node,
+                        f"{dotted} inside the fused hot path "
+                        f"({info.full_id}) — device sync outside the "
+                        "sanctioned sync point",
+                    )
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in _SYNC_METHODS and not node.args:
+                    yield ctx.finding(
+                        self, node,
+                        f".{node.func.attr}() inside the fused hot path "
+                        f"({info.full_id}) — device sync outside the "
+                        "sanctioned sync point",
+                    )
+                elif isinstance(node.func, ast.Name) and \
+                        node.func.id == "float" and node.args:
+                    arg = node.args[0]
+                    if isinstance(arg, ast.Constant):
+                        continue
+                    if isinstance(arg, ast.Call) and \
+                            isinstance(arg.func, ast.Name) and \
+                            arg.func.id in ("len", "int", "round"):
+                        continue
+                    yield ctx.finding(
+                        self, node,
+                        f"float(...) on a possible device value inside the "
+                        f"fused hot path ({info.full_id}) — blocking host "
+                        "sync",
+                    )

@@ -1,0 +1,74 @@
+"""unaccounted-noise: every DP noise draw flows through core/dp.py.
+
+The RDP accountant's ε is a statement about the noise ``core.dp``
+calibrates (``noise_share`` / ``tree_topup_noise``: N(0, (Cσ)²/n) shares,
+conservative top-ups).  A ``jax.random.normal`` scaled by some local
+sigma anywhere else is noise the ledger never hears about — the run
+*looks* private and isn't, the exact implementation-correctness gap the
+PPML surveys call out.
+
+Two triggers, src/ only (tests and benchmarks draw normals as fixtures):
+
+  * any ``jax.random.normal``/``laplace`` outside ``repro.core.dp`` and
+    outside ``repro/models`` + ``repro/kernels`` (parameter initialisers
+    and kernel references draw normals that are not noise);
+  * anywhere at all (models included): a draw multiplied by an expression
+    mentioning sigma/noise/std/clip — that is a privacy-noise shape, and
+    it must live in core/dp.py.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from repro.analysis.engine import FileContext, Rule, register_rule
+from repro.analysis.findings import Finding
+from repro.analysis.graphs import ModuleIndex
+
+_NOISE_FNS = frozenset({"jax.random.normal", "jax.random.laplace"})
+_EXEMPT_MODULE = "repro.core.dp"
+_INIT_PREFIXES = ("repro.models", "repro.kernels")
+_SIGMA_RE = re.compile(r"sigma|noise|(^|[^a-z])std([^a-z]|$)|clip",
+                       re.IGNORECASE)
+
+
+@register_rule
+class UnaccountedNoise(Rule):
+    id = "unaccounted-noise"
+    contract = ("every sigma-scaled Gaussian/Laplace draw lives in "
+                "core/dp.py where the accountant calibrates it")
+    design = "§13.3"
+
+    def check_file(self, ctx: FileContext, index: ModuleIndex) -> Iterator[Finding]:
+        if not ctx.rel.startswith("src/") or ctx.module == _EXEMPT_MODULE:
+            return
+        init_exempt = ctx.module.startswith(_INIT_PREFIXES)
+        # draw node -> enclosing BinOp multiplier text (if any)
+        scaled: dict[ast.AST, str] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+                for side, other in ((node.left, node.right),
+                                    (node.right, node.left)):
+                    if isinstance(side, ast.Call) and \
+                            ctx.dotted(side.func) in _NOISE_FNS:
+                        scaled[side] = ast.unparse(other)
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and ctx.dotted(node.func) in _NOISE_FNS):
+                continue
+            multiplier = scaled.get(node)
+            if multiplier is not None and _SIGMA_RE.search(multiplier):
+                yield ctx.finding(
+                    self, node,
+                    f"draw scaled by {multiplier!r} outside core/dp.py — "
+                    "noise bypassing the accountant/ledger",
+                )
+            elif not init_exempt:
+                yield ctx.finding(
+                    self, node,
+                    "jax.random.normal/laplace outside core/dp.py (and "
+                    "outside the models/kernels initialiser exemption) — "
+                    "route noise through repro.core.dp",
+                )

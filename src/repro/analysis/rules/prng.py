@@ -1,0 +1,185 @@
+"""prng-key-discipline: no PRNG stream may be consumed twice.
+
+A reused JAX key makes two "independent" noise draws identical — the DP
+mechanism then adds *correlated* noise and the ledger's ε is a fiction.
+Three checks, matching how keys are actually derived in this repo:
+
+  1. **Key reuse across draw sites** — the same key variable consumed by
+     two or more ``jax.random.<draw>`` calls with no rebinding between
+     them (including a draw inside a loop whose key never changes per
+     iteration).  Keys must be split or folded before every draw.
+  2. **Salt-constant collisions** — module-level ``*_SALT`` integers are
+     the per-purpose key-stream namespaces (decaph 17, primia 31,
+     gossip-dp 53, dp.TOPUP_SALT 1_000_003); two modules defining the
+     same value collapse two namespaces onto one stream.  src/ only —
+     vendored legacy snapshots under tests/ intentionally freeze old
+     salts.
+  3. **Untagged stdlib seeds** — ``random.Random(seed)`` in src/ must use
+     the ``f"{seed}:{tag}"`` tagged-stream discipline from
+     ``repro.population.spec``: int-seeded streams with the same seed are
+     byte-identical, so two untagged consumers of one run seed silently
+     correlate.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import FileContext, Rule, register_rule
+from repro.analysis.findings import Finding
+from repro.analysis.graphs import ModuleIndex
+
+DRAW_FNS = frozenset(
+    f"jax.random.{n}" for n in (
+        "normal", "uniform", "laplace", "bernoulli", "truncated_normal",
+        "categorical", "gumbel", "exponential", "poisson", "randint",
+        "permutation", "choice", "gamma", "beta", "rademacher", "bits",
+    )
+)
+
+
+def _assigned_names(node: ast.AST) -> set[str]:
+    """Every name (re)bound anywhere under ``node``."""
+    out: set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+            out.add(n.id)
+        elif isinstance(n, ast.NamedExpr) and isinstance(n.target, ast.Name):
+            out.add(n.target.id)
+    return out
+
+
+@register_rule
+class PrngKeyDiscipline(Rule):
+    id = "prng-key-discipline"
+    contract = ("every noise/draw key is fresh (split/fold_in per draw); "
+                "salt namespaces unique; stdlib seeds tagged f\"{seed}:{tag}\"")
+    design = "§13.1"
+
+    def check_file(self, ctx: FileContext, index: ModuleIndex) -> Iterator[Finding]:
+        yield from self._key_reuse(ctx)
+        if ctx.rel.startswith("src/"):
+            yield from self._untagged_random(ctx)
+
+    # -- 1: key reuse ---------------------------------------------------------
+
+    def _key_reuse(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            draws = []        # (lineno, key_name, node)
+            rebinds = []      # (lineno, name)
+            comp_targets = {}  # name -> comprehension node it is bound by
+            loops = []        # loop nodes, for per-iteration analysis
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    dotted = ctx.dotted(node.func)
+                    if dotted in DRAW_FNS and node.args and \
+                            isinstance(node.args[0], ast.Name):
+                        draws.append((node.lineno, node.args[0].id, node))
+                elif isinstance(node, ast.Name) and \
+                        isinstance(node.ctx, ast.Store):
+                    rebinds.append((node.lineno, node.id))
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.GeneratorExp, ast.DictComp)):
+                    for gen in node.generators:
+                        for t in ast.walk(gen.target):
+                            if isinstance(t, ast.Name):
+                                comp_targets[t.id] = node
+                elif isinstance(node, (ast.For, ast.While)):
+                    loops.append(node)
+
+            # (a) sequential reuse: two draws on one name, no rebind between
+            by_name: dict[str, list[tuple[int, ast.AST]]] = {}
+            for lineno, name, node in draws:
+                if name in comp_targets:
+                    continue  # fresh binding per comprehension iteration
+                by_name.setdefault(name, []).append((lineno, node))
+            for name, sites in by_name.items():
+                sites.sort(key=lambda t: t[0])
+                for (l1, _), (l2, node2) in zip(sites, sites[1:]):
+                    if not any(l1 < lr <= l2 and nr == name
+                               for lr, nr in rebinds):
+                        yield ctx.finding(
+                            self, node2,
+                            f"key {name!r} consumed by a second draw without "
+                            f"split/fold_in since line {l1} — reused PRNG "
+                            "stream",
+                        )
+
+            # (b) loop reuse: a draw inside a loop whose key is never
+            # rebound inside that loop body
+            for loop in loops:
+                bound_in_loop = _assigned_names(loop)
+                for node in ast.walk(loop):
+                    if isinstance(node, ast.Call):
+                        dotted = ctx.dotted(node.func)
+                        if dotted in DRAW_FNS and node.args and \
+                                isinstance(node.args[0], ast.Name):
+                            name = node.args[0].id
+                            if name not in bound_in_loop and \
+                                    name not in comp_targets:
+                                yield ctx.finding(
+                                    self, node,
+                                    f"key {name!r} drawn from inside a loop "
+                                    "but never rebound per iteration — every "
+                                    "pass reuses the same stream",
+                                )
+
+    # -- 3: untagged stdlib seeds --------------------------------------------
+
+    def _untagged_random(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if ctx.dotted(node.func) != "random.Random":
+                continue
+            if not node.args:
+                yield ctx.finding(self, node,
+                                  "unseeded random.Random() — draws are "
+                                  "irreproducible")
+                continue
+            arg = node.args[0]
+            if isinstance(arg, ast.JoinedStr):
+                text = "".join(v.value for v in arg.values
+                               if isinstance(v, ast.Constant)
+                               and isinstance(v.value, str))
+                if ":" in text:
+                    continue
+            elif isinstance(arg, ast.Constant) and \
+                    isinstance(arg.value, str) and ":" in arg.value:
+                continue
+            yield ctx.finding(
+                self, node,
+                "random.Random seed must use the tagged f\"{seed}:{tag}\" "
+                "stream discipline (repro.population.spec) — int-seeded "
+                "streams with a shared seed are byte-identical",
+            )
+
+    # -- 2: salt collisions (cross-file) --------------------------------------
+
+    def check_project(self, contexts, index) -> Iterator[Finding]:
+        salts: dict[int, list[tuple[FileContext, ast.AST, str]]] = {}
+        for ctx in contexts:
+            if not ctx.rel.startswith("src/"):
+                continue
+            for node in ctx.tree.body:
+                if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name) \
+                        and node.targets[0].id.endswith("_SALT") \
+                        and isinstance(node.value, ast.Constant) \
+                        and isinstance(node.value.value, int):
+                    salts.setdefault(node.value.value, []).append(
+                        (ctx, node, node.targets[0].id)
+                    )
+        for value, sites in sorted(salts.items()):
+            if len(sites) < 2:
+                continue
+            where = ", ".join(f"{c.rel}:{n.lineno}" for c, n, _ in sites)
+            for ctx, node, name in sites:
+                yield ctx.finding(
+                    self, node,
+                    f"salt {name} = {value} collides with another module's "
+                    f"salt ({where}) — fold_in namespaces must be unique",
+                )
