@@ -1,0 +1,611 @@
+"""repro.analysis: the contract rules, their computed scopes, and the CLI.
+
+Each rule gets a firing fixture AND a near-miss — the near-miss is the
+test that the rule encodes the *contract*, not a string match (a rule
+that flags `np.asarray(x, np.int32)` or a split-then-draw would make the
+pass unusable).  Plus: suppression semantics, fingerprint stability under
+unrelated edits, baseline round-trip, ``--changed`` scoping against a
+real git repo, and the dogfood check that the analysis package itself is
+clean under its own rules.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import all_rules, run_analysis
+from repro.analysis.baseline import load_baseline, split_new, write_baseline
+from repro.analysis.cli import main as cli_main
+from repro.analysis.engine import module_name_for
+from repro.analysis.findings import parse_suppressions
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# Harness
+# ---------------------------------------------------------------------------
+
+def project(tmp_path, files):
+    """Materialise {relpath: source} and run the full rule set over it."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return run_analysis([tmp_path], tmp_path)
+
+
+def rule_findings(result, rule_id):
+    return [f for f in result.findings if f.rule == rule_id]
+
+
+# ---------------------------------------------------------------------------
+# Registry / self-documentation
+# ---------------------------------------------------------------------------
+
+def test_registry_has_the_contract_rules():
+    rules = all_rules()
+    ids = {r.id for r in rules}
+    assert {"prng-key-discipline", "host-sync-hygiene", "unaccounted-noise",
+            "locked-shared-state", "canonical-hash-discipline",
+            "nondeterminism"} <= ids
+    for r in rules:
+        assert r.contract, f"{r.id} has no contract line"
+        assert r.design.startswith("§"), f"{r.id} has no DESIGN anchor"
+
+
+def test_module_name_for():
+    assert module_name_for("src/repro/arms/fused.py") == "repro.arms.fused"
+    assert module_name_for("src/repro/obs/__init__.py") == "repro.obs"
+    assert module_name_for("tests/test_obs.py") == "tests.test_obs"
+
+
+# ---------------------------------------------------------------------------
+# prng-key-discipline
+# ---------------------------------------------------------------------------
+
+def test_prng_key_reuse_fires(tmp_path):
+    result = project(tmp_path, {"src/pkg/a.py": """
+        import jax
+
+        def f(key, shape):
+            a = jax.random.normal(key, shape)
+            b = jax.random.normal(key, shape)
+            return a + b
+    """})
+    hits = rule_findings(result, "prng-key-discipline")
+    assert len(hits) == 1 and "reused PRNG stream" in hits[0].message
+
+
+def test_prng_split_between_draws_is_clean(tmp_path):
+    result = project(tmp_path, {"src/pkg/a.py": """
+        import jax
+
+        def f(key, shape):
+            a = jax.random.normal(key, shape)
+            key = jax.random.fold_in(key, 1)
+            b = jax.random.normal(key, shape)
+            return a + b
+    """})
+    assert rule_findings(result, "prng-key-discipline") == []
+
+
+def test_prng_loop_reuse_fires_and_fold_in_loop_is_clean(tmp_path):
+    result = project(tmp_path, {"src/pkg/bad.py": """
+        import jax
+
+        def f(key, n):
+            out = []
+            for i in range(n):
+                out.append(jax.random.normal(key, (3,)))
+            return out
+    """, "src/pkg/good.py": """
+        import jax
+
+        def f(key, n):
+            out = []
+            for i in range(n):
+                key = jax.random.fold_in(key, i)
+                out.append(jax.random.normal(key, (3,)))
+            return out
+    """})
+    hits = rule_findings(result, "prng-key-discipline")
+    assert len(hits) == 1 and hits[0].path == "src/pkg/bad.py"
+    assert "inside a loop" in hits[0].message
+
+
+def test_prng_comprehension_key_is_fresh_per_iteration(tmp_path):
+    result = project(tmp_path, {"src/pkg/a.py": """
+        import jax
+
+        def f(key, n):
+            keys = jax.random.split(key, n)
+            return [jax.random.normal(k, (3,)) for k in keys]
+    """})
+    assert rule_findings(result, "prng-key-discipline") == []
+
+
+def test_prng_untagged_stdlib_seed_fires_tagged_is_clean(tmp_path):
+    result = project(tmp_path, {"src/pkg/a.py": """
+        import random
+
+        def bad(seed):
+            return random.Random(seed)
+
+        def good(seed):
+            return random.Random(f"{seed}:rewire")
+    """})
+    hits = rule_findings(result, "prng-key-discipline")
+    assert len(hits) == 1 and "tagged" in hits[0].message
+
+
+def test_prng_salt_collision_across_modules(tmp_path):
+    result = project(tmp_path, {
+        "src/pkg/a.py": "A_SALT = 17\n",
+        "src/pkg/b.py": "B_SALT = 17\n",
+        "src/pkg/c.py": "C_SALT = 53\n",
+        "tests/legacy.py": "OLD_SALT = 17\n",  # tests/ exempt (vendored)
+    })
+    hits = rule_findings(result, "prng-key-discipline")
+    assert {f.path for f in hits} == {"src/pkg/a.py", "src/pkg/b.py"}
+
+
+# ---------------------------------------------------------------------------
+# host-sync-hygiene (computed hot-path scope)
+# ---------------------------------------------------------------------------
+
+HOT_PATH_SRC = {"src/pkg/arm.py": """
+    import jax
+
+    def helper(x):
+        return float(x)
+
+    def reporting(x):          # NOT reachable from fused_round
+        return float(x)
+
+    def fused_round(state, x):
+        y = helper(x)
+        return state, y
+"""}
+
+
+def test_hostsync_flags_sync_in_reachable_helper(tmp_path):
+    result = project(tmp_path, HOT_PATH_SRC)
+    hits = rule_findings(result, "host-sync-hygiene")
+    assert len(hits) == 1
+    assert "pkg.arm:helper" in hits[0].message
+    # the unreachable twin with the identical body is untouched: the scope
+    # is the call graph, not a name list
+    assert all("reporting" not in f.message for f in hits)
+
+
+def test_hostsync_dtype_asarray_is_host_data_not_a_sync(tmp_path):
+    result = project(tmp_path, {"src/pkg/arm.py": """
+        import numpy as np
+
+        def fused_round(state, active):
+            idx = np.asarray(active, np.int32)   # host-data construction
+            tail = np.asarray(state)             # device sync — flagged
+            return idx, tail
+    """})
+    hits = rule_findings(result, "host-sync-hygiene")
+    assert len(hits) == 1 and "numpy.asarray" in hits[0].message
+
+
+def test_hostsync_item_in_fused_round_fires(tmp_path):
+    result = project(tmp_path, {"src/pkg/arm.py": """
+        def fused_round(state, x):
+            return x.item()
+    """})
+    hits = rule_findings(result, "host-sync-hygiene")
+    assert len(hits) == 1 and ".item()" in hits[0].message
+
+
+def test_hostsync_real_whitelist_holds():
+    """The repo's own sanctioned sync point stays out of scope."""
+    from repro.analysis.rules.hostsync import WHITELIST
+    assert "repro.arms.fused:build_contributions" in WHITELIST
+
+
+# ---------------------------------------------------------------------------
+# unaccounted-noise
+# ---------------------------------------------------------------------------
+
+def test_noise_sigma_scaled_draw_outside_dp_fires(tmp_path):
+    result = project(tmp_path, {"src/pkg/mech.py": """
+        import jax
+
+        def add_noise(g, key, sigma):
+            return g + sigma * jax.random.normal(key, g.shape)
+    """})
+    hits = rule_findings(result, "unaccounted-noise")
+    assert len(hits) == 1 and "bypassing the accountant" in hits[0].message
+
+
+def test_noise_core_dp_is_the_sanctioned_home(tmp_path):
+    result = project(tmp_path, {"src/repro/core/dp.py": """
+        import jax
+
+        def noise_share(g, key, sigma):
+            return g + sigma * jax.random.normal(key, g.shape)
+    """})
+    assert rule_findings(result, "unaccounted-noise") == []
+
+
+def test_noise_model_initialisers_exempt_but_sigma_scaling_is_not(tmp_path):
+    result = project(tmp_path, {"src/repro/models/init.py": """
+        import jax
+
+        def init(key, shape):
+            return jax.random.normal(key, shape)        # initialiser: fine
+
+        def sneak(key, shape, noise_std):
+            return noise_std * jax.random.normal(key, shape)  # flagged
+    """})
+    hits = rule_findings(result, "unaccounted-noise")
+    assert len(hits) == 1 and "noise_std" in hits[0].message
+
+
+def test_noise_tests_and_benchmarks_exempt(tmp_path):
+    result = project(tmp_path, {"tests/test_x.py": """
+        import jax
+
+        def fixture(key, sigma):
+            return sigma * jax.random.normal(key, (3,))
+    """})
+    assert rule_findings(result, "unaccounted-noise") == []
+
+
+# ---------------------------------------------------------------------------
+# locked-shared-state (computed serve-thread scope)
+# ---------------------------------------------------------------------------
+
+THREADED = {
+    "src/app/state.py": """
+        import threading
+
+        CACHE = {}
+        _LOCK = threading.Lock()
+
+        def put(k, v):
+            CACHE[k] = v
+
+        def put_locked(k, v):
+            with _LOCK:
+                CACHE[k] = v
+
+        def register_thing(k, v):
+            CACHE[k] = v     # import-time registration convention
+    """,
+    "src/app/worker.py": """
+        import threading
+
+        from app import state
+
+        def work():
+            state.put(1, 2)
+
+        def start():
+            t = threading.Thread(target=work)
+            t.start()
+            return t
+    """,
+}
+
+
+def test_locking_flags_unlocked_mutation_in_thread_closure(tmp_path):
+    result = project(tmp_path, THREADED)
+    hits = rule_findings(result, "locked-shared-state")
+    assert len(hits) == 1
+    assert "'CACHE'" in hits[0].message and "put()" in hits[0].message
+
+
+def test_locking_quiet_without_any_thread(tmp_path):
+    files = {k: v for k, v in THREADED.items() if k != "src/app/worker.py"}
+    result = project(tmp_path, files)
+    assert rule_findings(result, "locked-shared-state") == []
+
+
+def test_locking_threading_local_is_clean(tmp_path):
+    files = dict(THREADED)
+    files["src/app/state.py"] = """
+        import threading
+
+        _TL = threading.local()
+
+        def put(k, v):
+            _TL.value = (k, v)
+    """
+    files["src/app/worker.py"] = files["src/app/worker.py"].replace(
+        "state.put(1, 2)", "state.put(1, 2)")
+    result = project(tmp_path, files)
+    assert rule_findings(result, "locked-shared-state") == []
+
+
+# ---------------------------------------------------------------------------
+# canonical-hash-discipline
+# ---------------------------------------------------------------------------
+
+def test_hashing_hand_rolled_dumps_plus_digest_fires(tmp_path):
+    result = project(tmp_path, {"src/pkg/addr.py": """
+        import hashlib
+        import json
+
+        def addr(obj):
+            raw = json.dumps(obj, sort_keys=True).encode()
+            return hashlib.sha256(raw).hexdigest()
+    """})
+    hits = rule_findings(result, "canonical-hash-discipline")
+    assert len(hits) == 1 and "repro.canon" in hits[0].message
+
+
+def test_hashing_split_across_functions_is_clean(tmp_path):
+    result = project(tmp_path, {"src/pkg/split.py": """
+        import hashlib
+        import json
+
+        def encode(obj):
+            return json.dumps(obj).encode()
+
+        def digest(raw):
+            return hashlib.sha256(raw).hexdigest()
+    """})
+    assert rule_findings(result, "canonical-hash-discipline") == []
+
+
+def test_hashing_tests_may_rederive(tmp_path):
+    result = project(tmp_path, {"tests/test_tamper.py": """
+        import hashlib
+        import json
+
+        def expected(obj):
+            return hashlib.sha256(json.dumps(obj).encode()).hexdigest()
+    """})
+    assert rule_findings(result, "canonical-hash-discipline") == []
+
+
+# ---------------------------------------------------------------------------
+# nondeterminism
+# ---------------------------------------------------------------------------
+
+def test_nondeterminism_fires_in_population_modules(tmp_path):
+    result = project(tmp_path, {"src/repro/population/thing.py": """
+        import time
+        import uuid
+
+        def trace_id(spec):
+            return f"{uuid.uuid4()}-{time.time()}-{hash(spec)}"
+    """})
+    msgs = [f.message for f in rule_findings(result, "nondeterminism")]
+    assert len(msgs) == 3
+    assert any("uuid.uuid4" in m for m in msgs)
+    assert any("time.time" in m for m in msgs)
+    assert any("hash()" in m for m in msgs)
+
+
+def test_nondeterminism_cli_modules_are_reporting_layers(tmp_path):
+    result = project(tmp_path, {"src/repro/population/cli.py": """
+        import time
+
+        def report():
+            return time.time()
+    """})
+    assert rule_findings(result, "nondeterminism") == []
+
+
+def test_nondeterminism_out_of_scope_module_untouched(tmp_path):
+    result = project(tmp_path, {"src/repro/serve/metrics.py": """
+        import time
+
+        def stamp():
+            return time.time()
+    """})
+    assert rule_findings(result, "nondeterminism") == []
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+def test_reasoned_suppression_suppresses(tmp_path):
+    result = project(tmp_path, {"src/repro/population/t.py": """
+        import time
+
+        def f():
+            return time.time()  # repro: allow[nondeterminism] wall metric only
+    """})
+    assert rule_findings(result, "nondeterminism") == []
+    assert len(result.suppressed) == 1
+
+
+def test_reasonless_suppression_does_not_suppress_and_is_itself_a_finding(tmp_path):
+    result = project(tmp_path, {"src/repro/population/t.py": """
+        import time
+
+        def f():
+            return time.time()  # repro: allow[nondeterminism]
+    """})
+    assert len(rule_findings(result, "nondeterminism")) == 1
+    meta = rule_findings(result, "analysis-suppression")
+    assert len(meta) == 1 and "without a reason" in meta[0].message
+
+
+def test_own_line_suppression_covers_next_line():
+    sups = parse_suppressions(
+        "# repro: allow[nondeterminism] wall metric\n"
+        "t0 = time.time()\n"
+    )
+    assert 2 in sups and sups[2][0].rule == "nondeterminism"
+
+
+def test_wrong_rule_suppression_does_not_suppress(tmp_path):
+    result = project(tmp_path, {"src/repro/population/t.py": """
+        import time
+
+        def f():
+            return time.time()  # repro: allow[prng-key-discipline] wrong rule
+    """})
+    assert len(rule_findings(result, "nondeterminism")) == 1
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints + baseline
+# ---------------------------------------------------------------------------
+
+BAD_SRC = """
+    import time
+
+    def f():
+        return time.time()
+"""
+
+
+def test_fingerprint_survives_unrelated_edits(tmp_path):
+    r1 = project(tmp_path / "v1", {"src/repro/population/t.py": BAD_SRC})
+    shifted = "# a new comment line\n# another\n" + textwrap.dedent(BAD_SRC)
+    r2 = project(tmp_path / "v2", {"src/repro/population/t.py": shifted})
+    f1, = rule_findings(r1, "nondeterminism")
+    f2, = rule_findings(r2, "nondeterminism")
+    assert f1.line != f2.line
+    assert f1.fingerprint() == f2.fingerprint()
+
+
+def test_duplicate_sites_get_distinct_fingerprints(tmp_path):
+    result = project(tmp_path, {"src/repro/population/t.py": """
+        import time
+
+        def f():
+            return time.time()
+
+        def g():
+            return time.time()
+    """})
+    fps = {f.fingerprint() for f in rule_findings(result, "nondeterminism")}
+    assert len(fps) == 2
+
+
+def test_baseline_round_trip_and_ratchet(tmp_path):
+    result = project(tmp_path, {"src/repro/population/t.py": BAD_SRC})
+    findings = rule_findings(result, "nondeterminism")
+    path = tmp_path / "baseline.json"
+    write_baseline(path, findings)
+    baseline = load_baseline(path)
+    new, old = split_new(findings, baseline)
+    assert new == [] and old == findings
+    # a fresh violation is NOT covered by the old baseline
+    r2 = project(tmp_path / "v2", {
+        "src/repro/population/t.py": BAD_SRC,
+        "src/repro/population/u.py": BAD_SRC,
+    })
+    new2, old2 = split_new(rule_findings(r2, "nondeterminism"), baseline)
+    assert {f.path for f in old2} == {"src/repro/population/t.py"}
+    assert {f.path for f in new2} == {"src/repro/population/u.py"}
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(tmp_path / "nope.json") == set()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _write_tree(root, files):
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+
+
+def test_cli_json_report_and_exit_codes(tmp_path, capsys):
+    _write_tree(tmp_path, {"src/repro/population/t.py": BAD_SRC})
+    out = tmp_path / "report.json"
+    rc = cli_main(["src", "--root", str(tmp_path), "--format", "json",
+                   "--out", str(out)])
+    capsys.readouterr()
+    assert rc == 1
+    payload = json.loads(out.read_text())
+    assert payload["counts"]["findings"] == 1
+    assert payload["findings"][0]["rule"] == "nondeterminism"
+    assert payload["findings"][0]["new"] is True
+    assert "hot_path_defs" in payload["scopes"]
+
+
+def test_cli_fail_on_new_respects_baseline(tmp_path, capsys):
+    _write_tree(tmp_path, {"src/repro/population/t.py": BAD_SRC})
+    rc = cli_main(["src", "--root", str(tmp_path), "--write-baseline"])
+    assert rc == 0
+    rc = cli_main(["src", "--root", str(tmp_path), "--fail-on-new"])
+    capsys.readouterr()
+    assert rc == 0   # baselined debt is frozen, not failing
+    _write_tree(tmp_path, {"src/repro/population/u.py": BAD_SRC})
+    rc = cli_main(["src", "--root", str(tmp_path), "--fail-on-new"])
+    err = capsys.readouterr().err
+    assert rc == 1 and "u.py" in err  # ...but new debt fails
+
+
+def test_cli_list_rules(capsys):
+    rc = cli_main(["--list-rules"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    for rid in ("prng-key-discipline", "host-sync-hygiene",
+                "canonical-hash-discipline"):
+        assert rid in out
+    assert "allow[<rule-id>]" in out
+
+
+def test_cli_missing_path_is_usage_error(tmp_path, capsys):
+    rc = cli_main(["no/such/dir", "--root", str(tmp_path)])
+    capsys.readouterr()
+    assert rc == 2
+
+
+def _git(root, *argv):
+    subprocess.run(["git", *argv], cwd=root, check=True,
+                   capture_output=True, text=True)
+
+
+def test_cli_changed_scopes_reporting_to_touched_files(tmp_path, capsys):
+    _write_tree(tmp_path, {
+        "src/repro/population/old.py": BAD_SRC,
+        "src/repro/population/clean.py": "X = 1\n",
+    })
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "-c", "user.email=t@t", "-c", "user.name=t",
+         "add", "-A")
+    _git(tmp_path, "-c", "user.email=t@t", "-c", "user.name=t",
+         "commit", "-qm", "seed")
+    # old.py's violation predates the diff; new.py's is in it
+    _write_tree(tmp_path, {"src/repro/population/new.py": BAD_SRC})
+    out = tmp_path / "report.json"
+    rc = cli_main(["src", "--root", str(tmp_path), "--changed", "HEAD",
+                   "--format", "json", "--out", str(out)])
+    capsys.readouterr()
+    assert rc == 1
+    paths = {f["path"] for f in json.loads(out.read_text())["findings"]}
+    assert paths == {"src/repro/population/new.py"}
+
+
+# ---------------------------------------------------------------------------
+# Dogfood + repo gate
+# ---------------------------------------------------------------------------
+
+def test_dogfood_analysis_package_is_clean_under_its_own_rules():
+    result = run_analysis([REPO_ROOT / "src" / "repro" / "analysis"],
+                          REPO_ROOT)
+    assert result.findings == []
+    assert result.skipped == []
+
+
+@pytest.mark.slow
+def test_repo_gate_src_tests_benchmarks_clean_with_empty_baseline():
+    """The PR acceptance gate, as a test: empty baseline, zero findings."""
+    baseline = load_baseline(REPO_ROOT / "analysis_baseline.json")
+    assert baseline == set()
+    result = run_analysis(
+        [REPO_ROOT / p for p in ("src", "tests", "benchmarks")], REPO_ROOT)
+    assert [f.render() for f in result.findings] == []
